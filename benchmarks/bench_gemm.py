@@ -1,0 +1,48 @@
+"""Table 2 analogue: GEMM kernel block-shape ("buffered columns") sweep.
+
+The paper's capacity knob (32 columns on Zynq / 128 on ZynqUS+, bounded by
+BRAM) becomes the Pallas bn block dimension bounded by VMEM; we report the
+VMEM working set and measured time per block shape (CPU interpret-mode
+times are *correctness-path* numbers; the VMEM model is the TPU-relevant
+output)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gemm.gemm import gemm, vmem_bytes
+from repro.kernels.gemm.ref import gemm_ref
+from repro.launch.mesh import VMEM_BYTES
+
+
+def sweep(n: int = 512):
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+    ref = gemm_ref(a, b)
+    rows = []
+    for bn in (32, 64, 128, 256):
+        bm, bk = min(128, n), min(256, n)
+        vb = vmem_bytes(bm, bn, bk)
+        t0 = time.perf_counter()
+        out = gemm(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+        out.block_until_ready()
+        dt = time.perf_counter() - t0
+        err = float(jnp.max(jnp.abs(out - ref)))
+        rows.append({"bn": bn, "vmem_bytes": vb,
+                     "vmem_frac": vb / VMEM_BYTES, "time_s": dt,
+                     "max_err": err, "fits_vmem": vb < VMEM_BYTES})
+    return rows
+
+
+def main():
+    print("bn,vmem_bytes,vmem_frac,fits_vmem,time_s,max_err")
+    for r in sweep():
+        print(f"{r['bn']},{r['vmem_bytes']},{r['vmem_frac']:.4f},"
+              f"{r['fits_vmem']},{r['time_s']:.3f},{r['max_err']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Fig. 5 reproduction: performance vs FPGA chunk size for CC/FC configs.
+
+Resources are calibrated simulators (service rates from the paper's observed
+platform ratio) plus a *real-executor* mode (jitted matmul = accelerator
+class, per-row numpy = core class) used by examples/hetero_gemm.py. Reports
+iterations/second per (config × chunk) — the U-shaped chunk-size curve and
+the heterogeneous win are the paper's headline results.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs.gemm_paper import FPGA_CHUNK_SWEEP, PLATFORMS
+from repro.core.energy import POWER_MODELS, run_energy
+from repro.core.hbb import Body, Dynamic, Params
+
+
+class CalibratedBody(Body):
+    """Service times calibrated to a platform's relative speed f."""
+
+    def __init__(self, cpu_it_s: float, fpga_it_s: float):
+        self.cpu_s = 1.0 / cpu_it_s
+        self.fpga_s = 1.0 / fpga_it_s
+
+    def operatorCPU(self, b, e):
+        time.sleep((e - b) * self.cpu_s)
+
+    def operatorFPGA(self, b, e):
+        time.sleep((e - b) * self.fpga_s)
+
+
+def run_config(platform, ncc: int, nfc: int, chunk: int, n: int = 20_000):
+    body = CalibratedBody(cpu_it_s=5_000.0 * platform.cpu_freq_mhz / 600.0,
+                          fpga_it_s=5_000.0 * platform.rel_fpga_speed
+                          * platform.cpu_freq_mhz / 600.0)
+    p = Params(num_cpu_tokens=ncc, num_fpga_tokens=nfc, fpga_chunk=chunk,
+               f0=platform.rel_fpga_speed)
+    rep = Dynamic(p).parallel_for(0, n, body)
+    kinds = {f"FC{i}": "accelerator" for i in range(nfc)}
+    kinds.update({f"CC{i}": "core" for i in range(ncc)})
+    pm = POWER_MODELS[platform.name]
+    energy, power = run_energy(rep, kinds, pm)
+    return {"it_per_s": n / rep.wall_time, "wall_s": rep.wall_time,
+            "f": rep.f_final, "energy_J": energy, "power_W": power}
+
+
+def rows(n: int = 20_000):
+    out = []
+    for pname, plat in PLATFORMS.items():
+        configs = [(plat.n_cpu_cores, 0), (0, plat.n_fpga_units),
+                   (plat.n_cpu_cores, plat.n_fpga_units)]
+        for ncc, nfc in configs:
+            for chunk in FPGA_CHUNK_SWEEP:
+                if nfc == 0 and chunk != FPGA_CHUNK_SWEEP[0]:
+                    continue        # chunk sweep is an FPGA knob
+                r = run_config(plat, ncc, nfc, chunk, n)
+                out.append({"platform": pname, "ncc": ncc, "nfc": nfc,
+                            "chunk": chunk, **r})
+    return out
+
+
+def main():
+    print("platform,ncc,nfc,chunk,it_per_s,wall_s,f,energy_J,power_W")
+    for r in rows():
+        print(f"{r['platform']},{r['ncc']},{r['nfc']},{r['chunk']},"
+              f"{r['it_per_s']:.0f},{r['wall_s']:.3f},{r['f']:.2f},"
+              f"{r['energy_J']:.3f},{r['power_W']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh) cell:
+  compute term    = dot_FLOPs / (chips × 197 TF/s)      [loop-aware HLO]
+  memory term     = HBM bytes / (chips × 819 GB/s)      [analytic: weights
+                    read + cache traffic + activation IO per step]
+  collective term = wire bytes / (chips × 50 GB/s)      [loop-aware HLO]
+
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the useful-flops
+ratio MODEL_FLOPS / HLO_FLOPs. The dominant term is the bottleneck the
+§Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs import SHAPES, all_configs, get_config
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.serve.kv_cache import cache_bytes
+from repro.sharding import params as prm
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "../experiments/dryrun")
+
+
+# ------------------------------------------------------------ model flops
+def n_params(cfg: ModelConfig) -> tuple[int, int]:
+    """→ (total, active) parameter counts."""
+    from repro.models.model import model_defs
+    total = prm.n_params(model_defs(cfg))
+    active = total
+    if cfg.moe:
+        m = cfg.moe
+        per_exp = 3 * cfg.d_model * m.d_expert if cfg.act in ("swiglu", "geglu") \
+            else 2 * cfg.d_model * m.d_expert
+        n_moe = sum(1 for i in range(cfg.n_layers) if cfg.is_moe_layer(i))
+        active = total - n_moe * (m.n_experts - m.top_k) * per_exp
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6·N_active·D for train; 2·N_active·D for inference steps."""
+    total, active = n_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * (shape.seq_len if not cfg.enc_dec
+                                       else shape.seq_len + cfg.max_decoder_len)
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch          # decode: 1 token/seq
+
+
+# ------------------------------------------------------- analytic HBM bytes
+def hbm_bytes_per_device(cfg: ModelConfig, shape: ShapeSpec,
+                         n_dev: int, msize: int = 16) -> float:
+    """Dominant HBM traffic per device per step: parameter reads (sharded)
+    + optimizer state R/W (train) + KV-cache read (decode) + activation IO
+    (2 bytes·tokens·d_model·layers·~8 tensors)."""
+    from repro.models.model import model_defs
+    pbytes = prm.param_bytes(model_defs(cfg)) / n_dev
+    tokens_local = shape.global_batch * max(shape.seq_len, 1) / n_dev
+    if shape.kind == "train":
+        opt = 2 * pbytes * 2            # m, v read+write (≥bf16)
+        act = tokens_local * cfg.d_model * 2 * cfg.n_layers * 8 * msize
+        # ×msize: tokens are gathered over the model axis inside blocks
+        return 3 * pbytes + opt + act   # params read fwd+bwd+update
+    if shape.kind == "prefill":
+        act = tokens_local * cfg.d_model * 2 * cfg.n_layers * 6 * msize
+        return pbytes + act
+    cache = cache_bytes(cfg, shape.global_batch, shape.seq_len, msize) / n_dev
+    return pbytes + cache               # decode: weights + full cache read
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    peak_gib: float
+    fits: bool
+    note: str = ""
+
+
+def analyze_cell(rec: dict) -> Cell | None:
+    if rec.get("skipped") or not rec.get("ok"):
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+    msize = 16
+    dot_flops_dev = rec["hlo"]["dot_flops_per_device"]
+    # bf16-normalized wire bytes (CPU XLA legalizes bf16 dots to f32 and
+    # hoists converts across collectives; TPU keeps bf16 — see hlo_analysis)
+    coll_dev = rec["hlo"].get("collective_bytes_per_device_bf16norm",
+                              rec["hlo"]["collective_bytes_per_device"])
+    compute_s = dot_flops_dev / PEAK_FLOPS_BF16
+    hbm = hbm_bytes_per_device(cfg, shape, n_dev, msize)
+    memory_s = hbm / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = dot_flops_dev * n_dev
+    return Cell(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=mf, hlo_flops_total=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        peak_gib=rec["memory"]["peak_bytes_per_device"] / 2**30,
+        fits=rec["memory"]["fits_hbm"],
+    )
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR) -> list[Cell]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        c = analyze_cell(json.load(open(f)))
+        if c:
+            cells.append(c)
+    return cells
+
+
+def roofline_fraction(c: Cell) -> float:
+    """Achievable MFU bound = useful compute / dominant-term time."""
+    step_time = max(c.compute_s, c.memory_s, c.collective_s)
+    ideal = c.model_flops / (PEAK_FLOPS_BF16 * _ndev(c))
+    return ideal / step_time if step_time else 0.0
+
+
+def _ndev(c: Cell) -> int:
+    return 512 if c.mesh == "multi" else 256
+
+
+def table(cells: list[Cell], mesh: str = "single") -> str:
+    rows = [c for c in cells if c.mesh == mesh]
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | roofline frac | peak GiB | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(rows, key=lambda c: (c.arch, c.shape)):
+        out.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s:.3e} | {c.memory_s:.3e} "
+            f"| {c.collective_s:.3e} | **{c.dominant}** "
+            f"| {c.useful_ratio:.2f} | {roofline_fraction(c):.3f} "
+            f"| {c.peak_gib:.1f} | {'y' if c.fits else 'N'} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    cells = load_cells()
+    print(table(cells, "single"))
+    print()
+    worst = sorted((c for c in cells if c.mesh == "single"),
+                   key=roofline_fraction)[:5]
+    print("worst roofline fractions:")
+    for c in worst:
+        print(f"  {c.arch} {c.shape}: frac={roofline_fraction(c):.4f} "
+              f"dominant={c.dominant}")
+    coll = sorted((c for c in cells if c.mesh == "single"),
+                  key=lambda c: -c.collective_s / max(c.compute_s, 1e-12))[:5]
+    print("most collective-bound:")
+    for c in coll:
+        print(f"  {c.arch} {c.shape}: coll/compute="
+              f"{c.collective_s / max(c.compute_s, 1e-12):.2f}")
+
+
+if __name__ == "__main__":
+    main()

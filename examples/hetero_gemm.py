@@ -1,0 +1,87 @@
+"""Paper-faithful reproduction: HBB ``parallel_for`` over GEMM row-blocks
+with REAL heterogeneous executors (no simulation):
+
+  * accelerator class ("FC"): the jitted Pallas-pattern GEMM on row chunks
+  * core class ("CC"):        a deliberately-slower interpreted per-row path
+
+    PYTHONPATH=src python examples/hetero_gemm.py [--n 512]
+
+Prints the Fig. 5-style table (configs × chunk sizes) on real wall time and
+verifies the result equals the single-shot matmul bit-for-bit structure.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hbb import Body, Dynamic, Params
+from repro.kernels.gemm.ref import gemm_ref
+
+
+class GemmBody(Body):
+    """C[b:e] = A[b:e] @ B on two real device-class executors."""
+
+    def __init__(self, A, B, out):
+        self.A, self.B, self.out = A, B, out
+        self._fast = jax.jit(lambda a, b: a @ b)
+        _ = self._fast(self.A[:1], self.B).block_until_ready()  # warm
+
+    def operatorFPGA(self, b, e):
+        blk = self._fast(self.A[b:e], self.B)
+        self.out[b:e] = np.asarray(blk)
+
+    def operatorCPU(self, b, e):
+        # interpreted row-at-a-time numpy: the "slow programmable core"
+        Bnp = self._Bnp if hasattr(self, "_Bnp") else np.asarray(self.B)
+        self._Bnp = Bnp
+        Anp = np.asarray(self.A[b:e])
+        for i in range(e - b):
+            self.out[b + i] = Anp[i] @ Bnp
+
+
+def run(n, ncc, nfc, chunk):
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (n, n), jnp.float32)
+    B = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+    out = np.zeros((n, n), np.float32)
+    body = GemmBody(A, B, out)
+    p = Params(num_cpu_tokens=ncc, num_fpga_tokens=nfc, fpga_chunk=chunk,
+               f0=8.0)
+    t0 = time.perf_counter()
+    rep = Dynamic(p).parallel_for(0, n, body)
+    dt = time.perf_counter() - t0
+    ref = np.asarray(gemm_ref(A, B))
+    err = float(np.max(np.abs(out - ref)))
+    return dt, rep, err
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=512)
+    args = ap.parse_args()
+    n = args.n
+    print(f"GEMM {n}×{n}; config → wall time (s), f, max err")
+    results = {}
+    for (ncc, nfc) in [(2, 0), (0, 1), (2, 1)]:
+        for chunk in (32, 64, 128):
+            if nfc == 0 and chunk != 32:
+                continue
+            dt, rep, err = run(n, ncc, nfc, chunk)
+            assert err < 1e-3, err
+            results[(ncc, nfc, chunk)] = dt
+            ik = rep.iters_by_kind(
+                {r.resource: ("accelerator" if r.resource.startswith("FC")
+                              else "core") for r in rep.records})
+            print(f"  CC={ncc} FC={nfc} S_f={chunk:4d}: {dt:6.3f}s  "
+                  f"f={rep.f_final:6.1f}  split={ik}")
+    t_off = min(v for (c, f, _), v in results.items() if c == 0)
+    t_het = min(v for (c, f, _), v in results.items() if c > 0 and f > 0)
+    print(f"\noffload-only best {t_off:.3f}s, heterogeneous best "
+          f"{t_het:.3f}s → reduction {100 * (1 - t_het / t_off):.1f}% "
+          f"(paper §6: 25–50 %)")
+
+
+if __name__ == "__main__":
+    main()

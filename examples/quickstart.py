@@ -1,0 +1,59 @@
+"""Quickstart: the public API in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch gemma2-2b]
+
+Builds a family-preserving smoke reduction of any assigned architecture,
+runs one training step, then prefill + two decode steps.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_config
+from repro.models.model import model_defs, synth_batch
+from repro.serve.decode import decode_step
+from repro.serve.prefill import prefill
+from repro.sharding import params as prm
+from repro.sharding.axes import single_device_ctx
+from repro.train.optimizer import OptConfig
+from repro.train.step import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_config(args.arch))
+    ctx = single_device_ctx()
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"params={prm.n_params(model_defs(cfg)):,}")
+
+    # --- one training step -------------------------------------------------
+    state = init_state(cfg, jax.random.PRNGKey(0), ctx)
+    step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3), ctx))
+    batch = synth_batch(cfg, batch=2, seq=64, key=jax.random.PRNGKey(1))
+    state, metrics = step(state, batch)
+    print(f"train: loss={float(metrics['loss']):.4f} "
+          f"|g|={float(metrics['grad_norm']):.3f}")
+
+    if cfg.enc_dec:
+        print("(enc-dec serving demo: see tests/test_serve.py)")
+        return
+
+    # --- prefill + decode ---------------------------------------------------
+    params = state["params"]
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0, cfg.vocab)
+    logits, cache = prefill(cfg, params, toks, ctx, max_len=32)
+    nxt = jnp.argmax(logits, -1)
+    print(f"prefill: next token {int(nxt[0])}")
+    for t in range(2):
+        pos = jnp.full((1,), 12 + t, jnp.int32)
+        logits, cache = decode_step(cfg, params, cache, nxt, pos, ctx)
+        nxt = jnp.argmax(logits, -1)
+        print(f"decode[{t}]: token {int(nxt[0])}")
+
+
+if __name__ == "__main__":
+    main()

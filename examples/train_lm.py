@@ -1,0 +1,77 @@
+"""End-to-end training driver (deliverable b): train a small LM for a few
+hundred steps on the synthetic copy-structured stream and watch it learn
+(loss drops below the unigram entropy once it exploits the copy pattern).
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~2M params, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --hundred-m     # ~100M params (slow on CPU)
+
+Exercises the full substrate: sharding ctx, data pipeline with prefetch,
+AdamW (+optional int8 moments), checkpoint/restart (kill it mid-run and
+rerun — it resumes), and a mid-run simulated failure with recovery.
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, register
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import SyntheticLM
+from repro.sharding.axes import single_device_ctx
+from repro.train.elastic import FailureInjector
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.optimizer import OptConfig
+
+MINI = ModelConfig(
+    name="lm-mini", family="dense", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=2, head_dim=32, d_ff=384, vocab=2048, act="swiglu",
+    attn_chunk=64)
+
+HUNDRED_M = dataclasses.replace(
+    MINI, name="lm-100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+    head_dim=64, d_ff=2304, vocab=32_000)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--inject-failure", action="store_true")
+    ap.add_argument("--moments", choices=["float32", "int8"],
+                    default="float32")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = HUNDRED_M if args.hundred_m else MINI
+    ctx = single_device_ctx()
+    data = SyntheticLM(cfg.vocab, args.seq, seed=0)
+    loader = PrefetchLoader(data.iterator(args.batch), ctx)
+    ocfg = OptConfig(lr=3e-3, warmup_steps=args.steps // 10,
+                     decay_steps=args.steps, moments_dtype=args.moments)
+    lcfg = LoopConfig(total_steps=args.steps, ckpt_every=50,
+                      ckpt_dir=args.ckpt_dir)
+    inj = FailureInjector({args.steps // 2: RuntimeError("injected")}) \
+        if args.inject_failure else None
+
+    losses = []
+
+    def log(step, row):
+        losses.append(row["loss"])
+        if step % 20 == 0:
+            print(f"step {step:4d}  loss {row['loss']:.4f}  "
+                  f"{row['tokens'] / row['dt']:.0f} tok/s")
+
+    res = train_loop(cfg, ocfg, lcfg, ctx, iter(loader), on_step=log,
+                     failure_injector=inj)
+    loader.close()
+    uni = np.log(cfg.vocab) * 0.75  # rough unigram entropy of the zipf mix
+    print(f"\nfirst-5 loss {np.mean(losses[:5]):.3f} → "
+          f"last-5 {np.mean(losses[-5:]):.3f} "
+          f"(unigram ≈ {uni:.2f}); restarts={res.restarts} "
+          f"resumed_from={res.resumed_from}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Emit the generated sections of EXPERIMENTS.md from dry-run artifacts.
+
+    PYTHONPATH=src python experiments/make_report.py [--dir experiments/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import (analyze_cell, load_cells,  # noqa: E402
+                                 roofline_fraction, table)
+
+
+def dryrun_table(d: str) -> str:
+    rows = ["| arch | shape | mesh | status | compile s | peak GiB/dev | "
+            "fits HBM | collectives (AG/AR/RS/A2A/CP) | HLO dot-FLOPs/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    n_ok = n_skip = 0
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        if r.get("skipped"):
+            n_skip += 1
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skipped (sub-quadratic rule) | – | – | – | – | – |")
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"**FAILED** {r.get('error', '')[:60]} | | | | | |")
+            continue
+        n_ok += 1
+        cc = r["hlo"]["collective_counts"]
+        counts = "/".join(str(int(cc.get(f"n_{k}", 0))) for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['compile_s']} | {m['peak_bytes_per_device'] / 2**30:.2f} "
+            f"| {'yes' if m['fits_hbm'] else 'no*'} | {counts} "
+            f"| {r['hlo']['dot_flops_per_device']:.2e} |")
+    head = (f"{n_ok} cells compiled (lower+compile on the production mesh), "
+            f"{n_skip} skipped by the long_500k sub-quadratic rule "
+            f"(DESIGN.md §4).\n\n")
+    return head + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(os.path.dirname(__file__),
+                                                  "dryrun"))
+    args = ap.parse_args()
+    print("## §Dry-run (generated)\n")
+    print(dryrun_table(args.dir))
+    print("\n## §Roofline — single pod 16×16 (generated)\n")
+    cells = load_cells(args.dir)
+    print(table(cells, "single"))
+    print("\n### multi-pod 2×16×16\n")
+    print(table(cells, "multi"))
+    singles = [c for c in cells if c.mesh == "single"]
+    if singles:
+        mean = sum(roofline_fraction(c) for c in singles) / len(singles)
+        tr = [c for c in singles if c.shape == "train_4k"]
+        mean_tr = sum(roofline_fraction(c) for c in tr) / max(len(tr), 1)
+        print(f"\nmean roofline fraction (all single-pod cells): {mean:.4f}; "
+              f"train cells only: {mean_tr:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Config registry: importing this package registers all assigned archs."""
+from repro.configs.base import (  # noqa: F401
+    MLACfg, MoECfg, ModelConfig, SHAPES, ShapeSpec, SSMCfg,
+    all_configs, cell_supported, get_config, register, smoke_config,
+)
+
+# one module per assigned architecture (registration side effect)
+from repro.configs import (  # noqa: F401
+    deepseek_v2_236b,
+    phi35_moe_42b,
+    gemma2_2b,
+    h2o_danube_18b,
+    nemotron4_15b,
+    mistral_nemo_12b,
+    mamba2_130m,
+    jamba_v01_52b,
+    internvl2_26b,
+    whisper_large_v3,
+)
+
+
+def arch_names():
+    return sorted(all_configs())

@@ -1,0 +1,92 @@
+"""Heterogeneous global-batch partitioner (beyond-paper integration).
+
+Training analogue of HBB's ``parallel_for``: the iteration space is the
+global batch; resources are *device tiers* (sub-meshes of unequal measured
+throughput — mixed pod generations, or degraded nodes). Each step the batch
+splits per the equal-service-time operand of the paper's law
+(``n_t ∝ f_t``, quantised to each tier's device count); per-step times feed
+the StragglerMonitor, whose updated f vector re-partitions the next step —
+the paper's online `f` loop at fleet scale.
+
+Gradients are combined host-side with sample-count weights, so the update
+is identical to an even split (invariant tested in
+tests/test_partitioner.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.chunking import proportional_split
+from repro.core.straggler import StragglerMonitor
+
+
+@dataclass
+class Tier:
+    """A homogeneous group of devices acting as one HBB resource."""
+    name: str
+    devices: list[Any]
+    grad_fn: Callable[..., Any]       # (params, batch_slice) → (grads, metrics)
+    slowdown: float = 1.0             # test hook: simulated degradation
+
+
+@dataclass
+class HeterogeneousBatchPartitioner:
+    tiers: list[Tier]
+    quantum: int = 1                  # per-tier batch must be a multiple
+    monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
+    warmup_obs: int = 1               # skip first N timings per tier (jit
+    _seen: dict = field(default_factory=dict)  # compile time would skew f)
+
+    def split(self, global_batch: int) -> list[int]:
+        speeds = self.monitor.relative_speeds()
+        spd = [max(speeds.get(t.name, 1.0), 1e-3) for t in self.tiers
+               if t.name not in self.monitor.excluded()]
+        names = [t.name for t in self.tiers
+                 if t.name not in self.monitor.excluded()]
+        parts = proportional_split(global_batch, spd, self.quantum)
+        out = []
+        i = 0
+        for t in self.tiers:
+            out.append(parts[names.index(t.name)] if t.name in names else 0)
+            i += 1
+        return out
+
+    def step(self, params, batch) -> tuple[Any, dict]:
+        """batch: host arrays dict with leading dim = global_batch. Runs each
+        tier on its slice, records service times, returns weighted-mean grads.
+        """
+        gb = len(jax.tree.leaves(batch)[0])
+        parts = self.split(gb)
+        grads, counts = [], []
+        offset = 0
+        for t, n in zip(self.tiers, parts):
+            if n == 0:
+                continue
+            sl = jax.tree.map(lambda x: x[offset:offset + n], batch)
+            offset += n
+            t0 = time.perf_counter()
+            g, _ = t.grad_fn(params, sl)
+            g = jax.block_until_ready(g)
+            dt = time.perf_counter() - t0
+            if t.slowdown > 1.0:
+                time.sleep(dt * (t.slowdown - 1.0))
+                dt *= t.slowdown
+            self._seen[t.name] = self._seen.get(t.name, 0) + 1
+            if self._seen[t.name] > self.warmup_obs:
+                self.monitor.observe(t.name, n, dt)
+            grads.append(g)
+            counts.append(n)
+        total = sum(counts)
+        weights = [c / total for c in counts]
+        mean = jax.tree.map(
+            lambda *gs: sum(w * g for w, g in zip(weights, gs)), *grads)
+        info = {"parts": parts,
+                "speeds": self.monitor.relative_speeds(),
+                "stragglers": self.monitor.stragglers(),
+                "excluded": self.monitor.excluded()}
+        return mean, info

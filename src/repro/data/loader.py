@@ -1,0 +1,63 @@
+"""Sharded host data loader with background prefetch.
+
+Each host process would load only its shard of the global batch
+(``shard_index``/``num_shards``); arrays go device-side with the batch
+sharding via ``device_put``, and a small prefetch queue overlaps host data
+generation with device compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+
+from repro.sharding.axes import ShardCtx
+
+
+class PrefetchLoader:
+    def __init__(self, source: Iterator[dict], ctx: ShardCtx | None = None,
+                 prefetch: int = 2, shard_index: int = 0, num_shards: int = 1):
+        self.source = source
+        self.ctx = ctx
+        self.shard_index = shard_index
+        self.num_shards = num_shards
+        self.q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch: dict) -> dict:
+        out = {}
+        for k, v in batch.items():
+            if self.num_shards > 1:
+                n = len(v) // self.num_shards
+                v = v[self.shard_index * n:(self.shard_index + 1) * n]
+            if self.ctx is not None and self.ctx.mesh.size > 1:
+                axes = ("batch",) + (None,) * (v.ndim - 1)
+                out[k] = jax.device_put(v, self.ctx.sharding(axes, v.shape))
+            else:
+                out[k] = jax.numpy.asarray(v)
+        return out
+
+    def _work(self) -> None:
+        try:
+            for batch in self.source:
+                if self._stop.is_set():
+                    return
+                self.q.put(self._place(batch))
+        finally:
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        self._stop.set()

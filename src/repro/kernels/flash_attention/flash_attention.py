@@ -1,0 +1,125 @@
+"""Flash-attention Pallas kernel (forward), causal / sliding-window.
+
+Grid = (B·H, nq, nk) with the KV dimension innermost and flash (o, m, l)
+accumulators in VMEM scratch; fully-masked KV blocks are skipped with
+``pl.when`` (causality → ~2× fewer live blocks; sliding window → O(T·w)).
+This is the TPU path for the XLA-level ``attend_chunked`` (same block-pair
+enumeration, same online softmax — cross-validated in tests).
+
+Layout: one (batch, head) pair per grid row — q (B,H,T,dh) contiguous in T,
+so each block load is a (bq, dh) VMEM tile; dh is the minor dim (128-align).
+The matching backward kernels live in ``flash_attention_bwd.py`` (dq and
+dk/dv passes with accumulator-local grids); both are validated against the
+pure-jnp oracle in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, nk: int,
+                  bq: int, bk: int, softcap: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q0 = qi * bq
+    k0 = kj * bk
+    # block-level skip: causal ⇒ k0 ≤ q0+bq-1 ; window ⇒ k0+bk-1 > q0-window
+    conds = []
+    if causal:
+        conds.append(k0 <= q0 + bq - 1)
+    if window:
+        conds.append(k0 + bk - 1 > q0 - window)
+    live = functools.reduce(jnp.logical_and, conds) if conds else None
+
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale            # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        iq = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        jk = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok &= jk <= iq
+        if window:
+            ok &= jk > iq - window
+        s = jnp.where(ok, s, NEG)
+
+        m_old = m_ref[:, :1]                                 # (bq,1)
+        m_blk = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_old, m_blk)
+        m_safe = jnp.where(m_new <= NEG / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(ok, p, 0.0)
+        corr = jnp.exp(jnp.where(m_old <= NEG / 2, NEG, m_old) - m_safe)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    if live is None:
+        _block()
+    else:
+        pl.when(live)(_block)
+
+    @pl.when(kj == nk - 1)
+    def _store():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "softcap", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
+                    causal: bool = True, window: int = 0, softcap: float = 0.0,
+                    bq: int = 512, bk: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,H,Tq,dh), k/v (B,H,Tk,dh) [GQA pre-broadcast] → (B,H,Tq,dv)."""
+    B, H, Tq, dh = q.shape
+    Tk = k.shape[2]
+    dv = v.shape[3]
+    bq, bk = min(bq, Tq), min(bk, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0, (Tq, Tk, bq, bk)
+    grid = (B * H, Tq // bq, Tk // bk)
+    qr = q.reshape(B * H, Tq, dh)
+    kr = k.reshape(B * H, Tk, dh)
+    vr = v.reshape(B * H, Tk, dv)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, nk=Tk // bk, bq=bq, bk=bk,
+                          softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Tq, dv)

@@ -1,0 +1,220 @@
+"""Flash-attention backward Pallas kernels (TPU training path).
+
+Same math as the XLA custom-VJP (`repro.models.attention._attend_bwd`):
+recompute p per block from the saved lse, then
+
+    dv_j += pᵀ do_i
+    ds    = p ⊙ (do_i vᵀ − delta_i)          delta = rowsum(do ⊙ o)
+    dq_i += ds k_j · scale ;  dk_j += dsᵀ q_i · scale
+
+Split into two kernels so every accumulator is local to its grid row
+(no cross-block races): dq iterates (q-block ⨯ kv-blocks-innermost), dkv
+iterates (kv-block ⨯ q-blocks-innermost). Causal/sliding-window block
+skipping mirrors the forward kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _masks(q0, k0, bq, bk, causal, window):
+    iq = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    jk = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= jk <= iq
+    if window:
+        ok &= jk > iq - window
+    return ok
+
+
+def _block_live(q0, k0, bq, bk, causal, window):
+    conds = []
+    if causal:
+        conds.append(k0 <= q0 + bq - 1)
+    if window:
+        conds.append(k0 + bk - 1 > q0 - window)
+    return functools.reduce(jnp.logical_and, conds) if conds else None
+
+
+def _p_and_ds(q, k, v, do, lse, delta, *, scale, softcap, ok):
+    s_pre = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    if softcap:
+        t = jnp.tanh(s_pre / softcap)
+        s = t * softcap
+    else:
+        t, s = None, s_pre
+    s = jnp.where(ok, s, NEG)
+    p = jnp.exp(s - lse)
+    p = jnp.where(ok, p, 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta)
+    if softcap:
+        ds = ds * (1.0 - t * t)
+    return p, ds
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dq_ref, acc_ref,
+               *, scale, causal, window, softcap, nk, bq, bk):
+    qi, kj = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body():
+        q0, k0 = qi * bq, kj * bk
+        ok = _masks(q0, k0, bq, bk, causal, window)
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        _, ds = _p_and_ds(q, k, v_ref[0].astype(jnp.float32),
+                          do_ref[0].astype(jnp.float32),
+                          lse_ref[0][:, :1], dl_ref[0][:, :1],
+                          scale=scale, softcap=softcap, ok=ok)
+        acc_ref[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    live = _block_live(qi * bq, kj * bk, bq, bk, causal, window)
+    if live is None:
+        body()
+    else:
+        pl.when(live)(body)
+
+    @pl.when(kj == nk - 1)
+    def _():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dk_ref, dv_ref,
+                dk_acc, dv_acc, *, scale, causal, window, softcap, nq, bq, bk):
+    kj, qi = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    def body():
+        q0, k0 = qi * bq, kj * bk
+        ok = _masks(q0, k0, bq, bk, causal, window)
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        p, ds = _p_and_ds(q, k, v_ref[0].astype(jnp.float32), do,
+                          lse_ref[0][:, :1], dl_ref[0][:, :1],
+                          scale=scale, softcap=softcap, ok=ok)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    live = _block_live(qi * bq, kj * bk, bq, bk, causal, window)
+    if live is None:
+        body()
+    else:
+        pl.when(live)(body)
+
+    @pl.when(qi == nq - 1)
+    def _():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "softcap", "bq", "bk",
+                                             "interpret"))
+def flash_attention_bwd(q, k, v, o, lse, do, *, scale, causal=True, window=0,
+                        softcap=0.0, bq=256, bk=256, interpret=False):
+    """q/k (B,H,T,dh), v/o/do (B,H,T,dv), lse (B,H,T) → (dq, dk, dv)."""
+    B, H, Tq, dh = q.shape
+    Tk, dv_ = k.shape[2], v.shape[3]
+    bq, bk = min(bq, Tq), min(bk, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    args = [x.reshape(B * H, x.shape[2], -1) for x in (q, k, v, do)]
+    lse_r = lse.reshape(B * H, Tq, 1)
+    dl_r = delta.reshape(B * H, Tq, 1)
+
+    common = dict(scale=scale, causal=causal, window=window, softcap=softcap,
+                  bq=bq, bk=bk)
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, nk=Tk // bk, **common),
+        grid=(B * H, Tq // bq, Tk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv_), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bq, dv_), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq, 1), lambda b, i, j: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(args[0], args[1], args[2], args[3], lse_r, dl_r)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, nq=Tq // bq, **common),
+        grid=(B * H, Tk // bk, Tq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv_), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bq, dv_), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bq, 1), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bq, 1), lambda b, j, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv_), lambda b, j, i: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Tk, dh), k.dtype),
+            jax.ShapeDtypeStruct((B * H, Tk, dv_), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, dh), jnp.float32),
+                        pltpu.VMEM((bk, dv_), jnp.float32)],
+        interpret=interpret,
+    )(args[0], args[1], args[2], args[3], lse_r, dl_r)
+    rs = lambda x: x.reshape(B, H, x.shape[1], x.shape[2])
+    return rs(dq), rs(dk), rs(dv)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "softcap", "bq", "bk",
+                                             "interpret"))
+def flash_attention_fwd_lse(q, k, v, *, scale, causal=True, window=0,
+                            softcap=0.0, bq=256, bk=256, interpret=False):
+    """Forward that also returns lse (residual for the bwd kernels)."""
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+    o = flash_attention(q, k, v, scale=scale, causal=causal, window=window,
+                        softcap=softcap, bq=bq, bk=bk, interpret=interpret)
+    # lse via a cheap jnp pass (numerically matches the kernel's masks)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    Tq, Tk = q.shape[2], k.shape[2]
+    iq = jnp.arange(Tq)[:, None]
+    jk = jnp.arange(Tk)[None, :]
+    ok = jnp.ones((Tq, Tk), bool)
+    if causal:
+        ok &= jk <= iq
+    if window:
+        ok &= jk > iq - window
+    s = jnp.where(ok[None, None], s, NEG)
+    lse = jax.scipy.special.logsumexp(s, axis=-1)
+    return o, lse

@@ -1,0 +1,13 @@
+"""Public flash-attention op: Pallas kernel (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def attend(q, k, v, *, scale, causal=True, window=0, softcap=0.0,
+           bq=512, bk=512):
+    interpret = jax.default_backend() == "cpu"
+    return flash_attention(q, k, v, scale=scale, causal=causal, window=window,
+                           softcap=softcap, bq=bq, bk=bk, interpret=interpret)

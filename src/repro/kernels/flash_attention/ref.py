@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel (O(T²) memory)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "softcap"))
+def flash_attention_ref(q, k, v, *, scale, causal=True, window=0,
+                        softcap=0.0):
+    """q (B,H,Tq,dh), k/v (B,H,Tk,d*) → (B,H,Tq,dv)."""
+    Tq, Tk = q.shape[2], k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    iq = jnp.arange(Tq)[:, None]
+    jk = jnp.arange(Tk)[None, :]
+    ok = jnp.ones((Tq, Tk), bool)
+    if causal:
+        ok &= jk <= iq
+    if window:
+        ok &= jk > iq - window
+    s = jnp.where(ok[None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

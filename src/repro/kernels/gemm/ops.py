@@ -1,0 +1,29 @@
+"""Public GEMM op: Pallas on TPU, interpret-mode on CPU, plus the
+HBB heterogeneous-grid mode (the paper-faithful row split)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gemm.gemm import gemm
+from repro.kernels.gemm.ref import gemm_ref
+
+
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
+           bk: int = 512) -> jax.Array:
+    interpret = jax.default_backend() == "cpu"
+    return gemm(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+def matmul_row_split(a, b, split: int, fast_fn=None, slow_fn=None):
+    """Paper mode: rows [0, split) to the accelerator-class executor, the
+    rest to the core-class executor (HBB decides `split`)."""
+    fast_fn = fast_fn or matmul
+    slow_fn = slow_fn or gemm_ref
+    top = fast_fn(a[:split], b) if split else None
+    bot = slow_fn(a[split:], b) if split < a.shape[0] else None
+    import jax.numpy as jnp
+    if top is None:
+        return bot
+    if bot is None:
+        return top
+    return jnp.concatenate([top, bot], axis=0)

@@ -1,0 +1,55 @@
+"""Grouped (per-expert) GEMM Pallas kernel — the MoE expert matmul.
+
+Computes ``out[e] = buf[e] @ w[e]`` for the capacity-dispatch buffers of
+:mod:`repro.models.moe` (megablox-lite). Grid (E, M/bm, N/bn, K/bk), fp32
+VMEM accumulator, expert index outermost so each expert's weight tiles are
+streamed once per (m, n) supertile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def grouped_gemm(a: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128,
+                 bk: int = 512, interpret: bool = False) -> jax.Array:
+    """a (E, M, K) @ w (E, K, N) → (E, M, N)."""
+    E, M, K = a.shape
+    E2, K2, N = w.shape
+    assert E == E2 and K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    nk = K // bk
+    grid = (E, M // bm, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, w)

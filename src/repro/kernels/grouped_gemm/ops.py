@@ -1,0 +1,11 @@
+"""Public grouped-GEMM op: Pallas on TPU, interpret-mode on CPU."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.grouped_gemm.grouped_gemm import grouped_gemm
+
+
+def expert_matmul(a, w, *, bm=128, bn=128, bk=512):
+    interpret = jax.default_backend() == "cpu"
+    return grouped_gemm(a, w, bm=bm, bn=bn, bk=bk, interpret=interpret)

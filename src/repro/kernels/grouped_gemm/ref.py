@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the grouped GEMM kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def grouped_gemm_ref(a: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum("emk,ekn->emn", a, w,
+                      preferred_element_type=jnp.float32).astype(a.dtype)

@@ -1,0 +1,11 @@
+"""Public SSD intra-chunk op: Pallas on TPU, interpret-mode on CPU."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd_intra_chunk
+
+
+def intra_chunk(x, cs, B, C):
+    interpret = jax.default_backend() == "cpu"
+    return ssd_intra_chunk(x, cs, B, C, interpret=interpret)

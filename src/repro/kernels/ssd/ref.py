@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def ssd_intra_chunk_ref(x, cs, B, C):
+    """x (G,Q,P), cs (G,Q,1), B/C (G,Q,N) → y (G,Q,P), states (G,N,P)."""
+    x = x.astype(jnp.float32)
+    cs = cs.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    Q = x.shape[1]
+    seg = cs[:, :, 0][:, :, None] - cs[:, :, 0][:, None, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None], jnp.exp(seg), 0.0)
+    att = jnp.einsum("gtn,gsn->gts", C, B) * L
+    y = jnp.einsum("gts,gsp->gtp", att, x)
+    decay_end = jnp.exp(cs[:, -1:, :] - cs)
+    st = jnp.einsum("gsn,gsp->gnp", B * decay_end, x)
+    return y, st

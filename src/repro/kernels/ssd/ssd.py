@@ -1,0 +1,73 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel.
+
+Computes the quadratic within-chunk part of the state-space-dual form for
+one (batch·chunk, head) grid cell:
+
+    L[t,s]   = exp(cs[t] - cs[s])·1[t ≥ s]
+    y_diag   = ((C Bᵀ) ⊙ L) @ x                      (Q,P)
+    state    = (B ⊙ exp(cs[-1] - cs))ᵀ @ x           (N,P)  chunk-final state
+
+The inter-chunk recurrence stays a `lax.scan` outside (linear in T). VMEM
+working set: Q² + Q·(2N+2P) fp32 — Q=256, N=128, P=64 → ~0.6 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, cs_ref, b_ref, c_ref, y_ref, st_ref):
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    cs = cs_ref[0].astype(jnp.float32)        # (Q, 1)
+    B = b_ref[0].astype(jnp.float32)          # (Q, N)
+    C = c_ref[0].astype(jnp.float32)          # (Q, N)
+    Q = x.shape[0]
+
+    seg = cs - cs.T                            # (Q, Q): cs[t] - cs[s]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    att = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32) * L
+    y_ref[0] = jnp.dot(att, x, preferred_element_type=jnp.float32
+                       ).astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cs[-1:] - cs)          # (Q, 1) broadcast over N
+    st = jax.lax.dot_general(B * decay_end, x, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    st_ref[0] = st.astype(st_ref.dtype)        # (N, P)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(x, cs, B, C, *, interpret: bool = False):
+    """x (G,Q,P), cs (G,Q,1), B/C (G,Q,N) → y (G,Q,P), states (G,N,P).
+
+    G = batch·chunks·heads flattened; caller folds dt into x and supplies
+    the inclusive cumsum `cs` of dt·A per head.
+    """
+    G, Q, P = x.shape
+    N = B.shape[-1]
+    y, st = pl.pallas_call(
+        _ssd_kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, 1), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, N, P), lambda g: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((G, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, cs, B, C)
+    return y, st

@@ -1,0 +1,249 @@
+"""Loop-aware HLO analysis: exact collective bytes + dot FLOPs per device.
+
+``compiled.cost_analysis()`` does NOT multiply while-loop bodies by their
+trip counts (verified empirically), so we parse the optimized HLO text:
+
+1. split into computations; record every collective (kind, result bytes,
+   replica-group size) and every ``dot`` (flops from shapes) per computation;
+2. build the call graph (while bodies with parsed trip counts, fusions,
+   calls, conditionals);
+3. DFS from ``main`` accumulating multipliers → totals that include every
+   scanned layer.
+
+Wire-byte model per device (bidirectional ring): all-gather out·(g-1)/g,
+reduce-scatter out·(g-1), all-reduce 2·size·(g-1)/g, all-to-all
+size·(g-1)/g, collective-permute size.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) (?:\([^\n]*\) -> [^\n{]+)?\{",
+                      re.M)
+_COLL_RE = re.compile(
+    r"= ((?:\([^)]*\))|(?:\S+)) (all-gather|all-reduce|reduce-scatter"
+    r"|all-to-all|collective-permute)(?:-start)?\(")
+_CALL_RE = re.compile(
+    r"(?:calls=%?([\w\.\-]+))|(?:to_apply=%?([\w\.\-]+))"
+    r"|(?:body=%?([\w\.\-]+))|(?:condition=%?([\w\.\-]+))"
+    r"|(?:branch_computations=\{([^}]*)\})"
+    r"|(?:true_computation=%?([\w\.\-]+))|(?:false_computation=%?([\w\.\-]+))")
+_WHILE_RE = re.compile(r"while\(.*body=%?([\w\.\-]+), *condition=%?([\w\.\-]+)|"
+                       r"while\(.*condition=%?([\w\.\-]+), *body=%?([\w\.\-]+)")
+_RG_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_RG_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DOT_RE = re.compile(r"= (\S+) dot\((.*?)\), lhs_batch_dims")
+_CONST_RE = re.compile(r"%?([\w\.\-]+) = s32\[\] constant\((\d+)\)")
+_CMP_RE = re.compile(r"compare\(([^)]*)\), direction=(LT|LE|GT|GE)")
+
+
+def _type_bytes(t: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(t):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CompInfo:
+    collectives: list = field(default_factory=list)   # (kind, bytes, gsize)
+    dot_flops: float = 0.0
+    children: list = field(default_factory=list)      # (name, multiplier)
+
+
+def _split_computations(txt: str) -> dict[str, str]:
+    comps: dict[str, str] = {}
+    cur, buf = None, []
+    for line in txt.splitlines():
+        m = re.match(r"^(ENTRY )?%?([\w\.\-]+) (\([^)]*\)|.*?) -> .*\{", line) \
+            or re.match(r"^(ENTRY )?%?([\w\.\-]+) \{", line)
+        if m and not line.startswith(" "):
+            if cur is not None:
+                comps[cur] = "\n".join(buf)
+            cur = m.group(2)
+            buf = [line]
+        elif cur is not None:
+            buf.append(line)
+    if cur is not None:
+        comps[cur] = "\n".join(buf)
+    return comps
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _RG_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return n_devices
+
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT )?%?([\w\.\-]+) = (\S+(?: \S+\])?)\s")
+
+
+def _symbol_shapes(body: str) -> dict[str, list[int]]:
+    """instruction name → result dims (first array shape in its type)."""
+    table: dict[str, list[int]] = {}
+    for line in body.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        sm = _SHAPE_RE.search(line.split(" = ", 1)[1])
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            table[m.group(1)] = dims
+    return table
+
+
+def _dot_flops(line: str, symbols: dict[str, list[int]]) -> float:
+    """2 · prod(result dims) · contracted size (lhs operand looked up)."""
+    m = re.search(r"= (\S+) dot\(", line)
+    if not m:
+        return 0.0
+    om = _SHAPE_RE.search(m.group(1))
+    if not om:
+        return 0.0
+    out_elems = math.prod(int(d) for d in om.group(2).split(",") if d) \
+        if om.group(2) else 1
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    ops = re.search(r"dot\(([^)]*)\)", line)
+    csize = 1
+    if cm and ops:
+        lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
+        lhs_dims = symbols.get(lhs_name)
+        if lhs_dims is not None:
+            for i in (int(x) for x in cm.group(1).split(",") if x):
+                if i < len(lhs_dims):
+                    csize *= lhs_dims[i]
+    return 2.0 * out_elems * csize
+
+
+def _trip_count(cond_body: str, consts: dict[str, int]) -> int | None:
+    m = _CMP_RE.search(cond_body)
+    limit = None
+    if m:
+        for arg in m.group(1).split(","):
+            arg = arg.strip().lstrip("%")
+            if arg in consts:
+                limit = consts[arg]
+        if limit is not None:
+            return limit if m.group(2) in ("LT", "GT") else limit + 1
+    # fallback: any s32 constant inside the condition
+    cs = re.findall(r"constant\((\d+)\)", cond_body)
+    if cs:
+        return int(cs[-1])
+    return None
+
+
+def analyze_hlo(txt: str, n_devices: int) -> dict:
+    comps = _split_computations(txt)
+    # global s32 constants (trip-count limits live inside cond computations)
+    infos: dict[str, CompInfo] = {}
+    entry = None
+    for name, body in comps.items():
+        if "ENTRY" in body.splitlines()[0]:
+            entry = name
+        info = CompInfo()
+        symbols = _symbol_shapes(body)
+        for line in body.splitlines():
+            cm = _COLL_RE.search(line)
+            if cm and "-done" not in line:
+                kind = cm.group(2)
+                nbytes = _type_bytes(cm.group(1))
+                g = _group_size(line, n_devices)
+                is_f32 = cm.group(1).startswith("f32") or \
+                    "(f32" in cm.group(1)
+                info.collectives.append((kind, nbytes, g, is_f32))
+            if " dot(" in line:
+                info.dot_flops += _dot_flops(line, symbols)
+            wm = _WHILE_RE.search(line)
+            if wm:
+                bodyc = wm.group(1) or wm.group(4)
+                condc = wm.group(2) or wm.group(3)
+                consts = dict((n, int(v)) for n, v in
+                              _CONST_RE.findall(comps.get(condc, "")))
+                tc = _trip_count(comps.get(condc, ""), consts) or 1
+                info.children.append((bodyc, tc))
+                info.children.append((condc, tc))
+            else:
+                for g in _CALL_RE.finditer(line):
+                    for target in g.groups():
+                        if target:
+                            for t in target.split(","):
+                                t = t.strip().lstrip("%")
+                                if t in comps:
+                                    info.children.append((t, 1))
+        infos[name] = info
+    entry = entry or (next(iter(comps)) if comps else None)
+
+    totals = defaultdict(float)
+    coll_bytes = 0.0
+    coll_bytes_norm = 0.0   # bf16-normalized: CPU XLA legalizes bf16 dots to
+    # f32 and hoists the converts across collectives (verified via op_name
+    # provenance); on TPU (native bf16 MXU) those tensors stay bf16, so f32
+    # collective payloads are counted at half width for the TPU roofline.
+    coll_by_kind = defaultdict(float)
+    flops = 0.0
+    warnings: list[str] = []
+    seen_stack: set[str] = set()
+
+    def wire(kind: str, nbytes: float, g: int) -> float:
+        if g <= 1:
+            return 0.0
+        if kind == "all-gather":
+            return nbytes * (g - 1) / g
+        if kind == "reduce-scatter":
+            return nbytes * (g - 1)
+        if kind == "all-reduce":
+            return 2.0 * nbytes * (g - 1) / g
+        if kind == "all-to-all":
+            return nbytes * (g - 1) / g
+        return float(nbytes)  # collective-permute
+
+    def visit(name: str, mult: float):
+        nonlocal coll_bytes, coll_bytes_norm, flops
+        if name in seen_stack:  # recursion guard
+            return
+        info = infos.get(name)
+        if info is None:
+            return
+        seen_stack.add(name)
+        for kind, nbytes, g, is_f32 in info.collectives:
+            w = wire(kind, nbytes, g) * mult
+            coll_bytes += w
+            coll_bytes_norm += w * (0.5 if is_f32 else 1.0)
+            coll_by_kind[kind] += w
+            totals[f"n_{kind}"] += mult
+        flops += info.dot_flops * mult
+        for child, m in info.children:
+            visit(child, mult * m)
+        seen_stack.discard(name)
+
+    if entry:
+        visit(entry, 1.0)
+    return {
+        "collective_bytes_per_device": coll_bytes,
+        "collective_bytes_per_device_bf16norm": coll_bytes_norm,
+        "collective_bytes_by_kind": dict(coll_by_kind),
+        "collective_counts": {k: v for k, v in totals.items()},
+        "dot_flops_per_device": flops,
+        "n_computations": len(comps),
+    }

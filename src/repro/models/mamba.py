@@ -1,0 +1,361 @@
+"""Mamba mixers: Mamba-1 (selective scan, Jamba) and Mamba-2 (SSD).
+
+XLA paths are *chunked*: sequence is split into chunks; within a chunk the
+recurrence is computed with associative-scan / cumsum einsums; a `lax.scan`
+carries the SSM state across chunks (linear in T, bounded memory — this is
+what makes the 512 k-token cells runnable). The Pallas SSD kernel
+(`repro.kernels.ssd`) is the TPU-optimised intra-chunk path.
+
+Sharding: d_inner / SSD heads over ``model`` (replicated when not divisible,
+e.g. mamba2-130m's 24 heads on a 16-way axis — noted in EXPERIMENTS.md);
+sequence gathered at entry, reduce-scattered at exit (SP), like attention.
+
+Single-token decode steps (`mamba1_step`, `mamba2_step`) carry
+(conv_state, ssm_state) — SSMs are O(1)-state decoders, which is exactly why
+the long_500k cell is assigned to this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_def
+from repro.sharding.axes import ShardCtx
+from repro.sharding.params import pd
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------------ common
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,C), w (K,C), b (C,)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S, :] * w[i] for i in range(K))
+    return y + b
+
+
+def conv_step(conv_state, xt, w, b):
+    """conv_state (B,K-1,C), xt (B,C) → (new_state, yt (B,C))."""
+    K = w.shape[0]
+    full = jnp.concatenate([conv_state, xt[:, None, :]], axis=1)  # (B,K,C)
+    yt = jnp.einsum("bkc,kc->bc", full, w) + b
+    return full[:, 1:], yt
+
+
+# ------------------------------------------------------------------ mamba2
+def mamba2_defs(cfg: ModelConfig):
+    s = cfg.ssm
+    D, C = cfg.d_model, cfg.d_inner
+    H = C // s.head_dim
+    N = s.d_state
+    out_scale = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    return {
+        "wz": pd((D, C), ("embed", "d_inner"), dtype=cfg.pdtype),
+        "wx": pd((D, C), ("embed", "d_inner"), dtype=cfg.pdtype),
+        "wB": pd((D, N), ("embed", "ssm_state"), dtype=cfg.pdtype),
+        "wC": pd((D, N), ("embed", "ssm_state"), dtype=cfg.pdtype),
+        "wdt": pd((D, H), ("embed", "ssm_heads"), dtype=cfg.pdtype),
+        "conv_x": pd((s.d_conv, C), ("conv", "d_inner"), scale=0.1,
+                     dtype=cfg.pdtype),
+        "conv_x_b": pd((C,), ("d_inner",), init="zeros", dtype=cfg.pdtype),
+        "conv_B": pd((s.d_conv, N), ("conv", "ssm_state"), scale=0.1,
+                     dtype=cfg.pdtype),
+        "conv_B_b": pd((N,), ("ssm_state",), init="zeros", dtype=cfg.pdtype),
+        "conv_C": pd((s.d_conv, N), ("conv", "ssm_state"), scale=0.1,
+                     dtype=cfg.pdtype),
+        "conv_C_b": pd((N,), ("ssm_state",), init="zeros", dtype=cfg.pdtype),
+        "A_log": pd((H,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "D_skip": pd((H,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": pd((H,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "gn": rmsnorm_def(C),
+        "wo": pd((C, D), ("d_inner", "embed"), scale=out_scale,
+                 dtype=cfg.pdtype),
+    }
+
+
+def _mamba2_inputs(cfg, p, x, positions=None):
+    """Shared projection+conv for train & decode. x (B,S,D)."""
+    z = jnp.einsum("bsd,dc->bsc", x, p["wz"])
+    xs = jnp.einsum("bsd,dc->bsc", x, p["wx"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(F32)
+    return z, xs, Bm, Cm, dt
+
+
+def ssd_scan(xh, dt_a, Bm, Cm, chunk: int, intra_fn=None):
+    """Chunked SSD (state-space duality) core.
+
+    xh (B,S,H,P) [dt already folded in], dt_a (B,S,H) [= dt·A, negative],
+    Bm/Cm (B,S,N). Returns y (B,S,H,P) and final state (B,H,P,N).
+    `intra_fn` optionally overrides the intra-chunk computation (Pallas).
+    """
+    B, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S0 = S
+    pad = (-S) % Q
+    if pad:  # zero x + zero dt·A are exact no-ops for the recurrence
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_a = jnp.pad(dt_a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    xc = xh.reshape(B, nc, Q, H, Pd).astype(F32)
+    ac = dt_a.reshape(B, nc, Q, H).astype(F32)
+    Bc = Bm.reshape(B, nc, Q, N).astype(F32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(F32)
+
+    cs = jnp.cumsum(ac, axis=2)                       # (B,nc,Q,H) inclusive
+    # intra-chunk (quadratic in Q): L[t,s] = exp(cs_t - cs_s) for t ≥ s
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    att = jnp.einsum("bctn,bcsn,bctsh->bchts", Cc, Bc, L)
+    y_diag = jnp.einsum("bchts,bcshp->bcthp", att, xc)
+
+    # chunk-final states: decay from position s to chunk end
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)         # (B,nc,Q,H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_end, xc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])             # (B,nc,H)
+
+    def body(h, inp):
+        st, dec = inp                                  # (B,H,P,N), (B,H)
+        h_new = st + dec[..., None, None] * h
+        return h_new, h                                # emit state *entering*
+
+    h0 = jnp.zeros((B, H, Pd, N), F32)
+    h_last, h_in = jax.lax.scan(
+        body, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                    # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bctn,bchpn,bcth->bcthp", Cc, h_in, jnp.exp(cs))
+    y = (y_diag + y_off).reshape(B, S, H, Pd)
+    return y[:, :S0], h_last
+
+
+def mamba2_mixer(cfg: ModelConfig, p, x, ctx: ShardCtx, return_state=False):
+    """x (B,S,D) seq-sharded → (B,S,D) seq-sharded (full train/prefill)."""
+    s = cfg.ssm
+    x = ctx.constrain(x, ("batch", None, None))        # gather seq (SP)
+    B, S, D = x.shape
+    C = cfg.d_inner
+    H, Pd = C // s.head_dim, s.head_dim
+
+    z, xs, Bm, Cm, dt = _mamba2_inputs(cfg, p, x)
+    xs_pre, Bm_pre, Cm_pre = xs, Bm, Cm               # pre-conv (decode state)
+    xs = jax.nn.silu(causal_conv(xs, p["conv_x"], p["conv_x_b"]))
+    Bm = jax.nn.silu(causal_conv(Bm, p["conv_B"], p["conv_B_b"]))
+    Cm = jax.nn.silu(causal_conv(Cm, p["conv_C"], p["conv_C_b"]))
+    xs = ctx.constrain(xs, ("batch", None, "d_inner"))
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])            # (B,S,H) f32
+    a = -jnp.exp(p["A_log"].astype(F32))               # (H,)
+    xh = xs.reshape(B, S, H, Pd).astype(F32) * dt[..., None]
+    y, h_last = ssd_scan(xh, dt * a, Bm, Cm, s.chunk)
+    y = y + p["D_skip"][None, None, :, None] * xs.reshape(B, S, H, Pd).astype(F32)
+    y = y.reshape(B, S, C).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gn"], cfg.norm_eps)
+    out = jnp.einsum("bsc,cd->bsd", y, p["wo"])
+    out = ctx.constrain(out, ("batch", "seq", None))
+    if not return_state:
+        return out
+    K = s.d_conv - 1
+    state = {"conv_x": xs_pre[:, S - K:, :].astype(cfg.pdtype),
+             "conv_B": Bm_pre[:, S - K:, :].astype(cfg.pdtype),
+             "conv_C": Cm_pre[:, S - K:, :].astype(cfg.pdtype),
+             "ssm": h_last}
+    return out, state
+
+
+def mamba2_step(cfg: ModelConfig, p, xt, state, ctx: ShardCtx):
+    """Decode step. xt (B,D); state dict with conv_{x,B,C} + ssm (B,H,P,N)."""
+    s = cfg.ssm
+    C = cfg.d_inner
+    H, Pd = C // s.head_dim, s.head_dim
+    z, xs, Bm, Cm, dt = _mamba2_inputs(cfg, p, xt[:, None, :])
+    z, xs, Bm, Cm, dt = z[:, 0], xs[:, 0], Bm[:, 0], Cm[:, 0], dt[:, 0]
+    st_x, xs = conv_step(state["conv_x"], xs, p["conv_x"], p["conv_x_b"])
+    st_B, Bm = conv_step(state["conv_B"], Bm, p["conv_B"], p["conv_B_b"])
+    st_C, Cm = conv_step(state["conv_C"], Cm, p["conv_C"], p["conv_C_b"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"]).astype(F32)          # (B,H)
+    a = -jnp.exp(p["A_log"].astype(F32))
+    da = jnp.exp(dt * a)                                         # (B,H)
+    xh = xs.reshape(-1, H, Pd).astype(F32) * dt[..., None]
+    h = state["ssm"] * da[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", Bm.astype(F32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(F32), h)
+    y = y + p["D_skip"][None, :, None] * xs.reshape(-1, H, Pd).astype(F32)
+    y = y.reshape(-1, C).astype(xt.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gn"], cfg.norm_eps)
+    out = jnp.einsum("bc,cd->bd", y, p["wo"])
+    new_state = {"conv_x": st_x, "conv_B": st_B, "conv_C": st_C, "ssm": h}
+    return out, new_state
+
+
+def mamba2_state_defs(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    C = cfg.d_inner
+    H, Pd = C // s.head_dim, s.head_dim
+    K = s.d_conv - 1
+    return {
+        "conv_x": pd((batch, K, C), ("batch", "conv", "d_inner"), init="zeros",
+                     dtype=cfg.pdtype),
+        "conv_B": pd((batch, K, s.d_state), ("batch", "conv", "ssm_state"),
+                     init="zeros", dtype=cfg.pdtype),
+        "conv_C": pd((batch, K, s.d_state), ("batch", "conv", "ssm_state"),
+                     init="zeros", dtype=cfg.pdtype),
+        "ssm": pd((batch, H, Pd, s.d_state),
+                  ("batch", "ssm_heads", None, None), init="zeros",
+                  dtype=jnp.float32),
+    }
+
+
+# ------------------------------------------------------------------ mamba1
+def mamba1_defs(cfg: ModelConfig):
+    s = cfg.ssm
+    D, C, N = cfg.d_model, cfg.d_inner, s.d_state
+    dt_rank = max(1, -(-cfg.d_model // 16))
+    out_scale = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    return {
+        "wz": pd((D, C), ("embed", "d_inner"), dtype=cfg.pdtype),
+        "wx": pd((D, C), ("embed", "d_inner"), dtype=cfg.pdtype),
+        "conv_x": pd((s.d_conv, C), ("conv", "d_inner"), scale=0.1,
+                     dtype=cfg.pdtype),
+        "conv_x_b": pd((C,), ("d_inner",), init="zeros", dtype=cfg.pdtype),
+        "w_bcdt": pd((C, dt_rank + 2 * N), ("d_inner", None), dtype=cfg.pdtype),
+        "w_dt": pd((dt_rank, C), (None, "d_inner"), dtype=cfg.pdtype),
+        "dt_bias": pd((C,), ("d_inner",), init="zeros", dtype=jnp.float32),
+        "A_log": pd((C, N), ("d_inner", "ssm_state"), init="zeros",
+                    dtype=jnp.float32),
+        "D_skip": pd((C,), ("d_inner",), init="ones", dtype=jnp.float32),
+        "wo": pd((C, D), ("d_inner", "embed"), scale=out_scale,
+                 dtype=cfg.pdtype),
+    }
+
+
+def _mamba1_inputs(cfg, p, x):
+    s = cfg.ssm
+    N = s.d_state
+    dt_rank = p["w_dt"].shape[0]
+    z = jnp.einsum("bsd,dc->bsc", x, p["wz"])
+    xs = jnp.einsum("bsd,dc->bsc", x, p["wx"])
+    return z, xs, dt_rank, N
+
+
+def _mamba1_ssm_params(cfg, p, xs):
+    """xs: post-conv (B,S,C) → dt (B,S,C) f32, Bm/Cm (B,S,N) f32."""
+    s = cfg.ssm
+    N = s.d_state
+    dt_rank = p["w_dt"].shape[0]
+    bcdt = jnp.einsum("bsc,cr->bsr", xs, p["w_bcdt"])
+    dt_r, Bm, Cm = (bcdt[..., :dt_rank], bcdt[..., dt_rank:dt_rank + N],
+                    bcdt[..., dt_rank + N:])
+    dt = jnp.einsum("bsr,rc->bsc", dt_r, p["w_dt"]).astype(F32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    return dt, Bm.astype(F32), Cm.astype(F32)
+
+
+def mamba1_mixer(cfg: ModelConfig, p, x, ctx: ShardCtx, return_state=False):
+    """Selective scan, chunked: associative scan within chunks, lax.scan across."""
+    s = cfg.ssm
+    x = ctx.constrain(x, ("batch", None, None))
+    B, S, D = x.shape
+    C, N = cfg.d_inner, s.d_state
+    z, xs, _, _ = _mamba1_inputs(cfg, p, x)
+    xs_pre = xs
+    xs = jax.nn.silu(causal_conv(xs, p["conv_x"], p["conv_x_b"]))
+    xs = ctx.constrain(xs, ("batch", None, "d_inner"))
+    dt, Bm, Cm = _mamba1_ssm_params(cfg, p, xs)
+    A = -jnp.exp(p["A_log"].astype(F32))                    # (C,N)
+
+    Q = min(s.chunk, S)
+    S0 = S
+    pad = (-S) % Q
+    xs_f, dt_f, Bm_f, Cm_f = xs.astype(F32), dt, Bm, Cm
+    if pad:  # zero x + dt → a=exp(0)=1, b=0: exact no-op steps
+        xs_f = jnp.pad(xs_f, ((0, 0), (0, pad), (0, 0)))
+        dt_f = jnp.pad(dt_f, ((0, 0), (0, pad), (0, 0)))
+        Bm_f = jnp.pad(Bm_f, ((0, 0), (0, pad), (0, 0)))
+        Cm_f = jnp.pad(Cm_f, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    xf = xs_f.reshape(B, nc, Q, C)
+    dtc = dt_f.reshape(B, nc, Q, C)
+    Bc = Bm_f.reshape(B, nc, Q, N)
+    Cc = Cm_f.reshape(B, nc, Q, N)
+
+    def chunk_body(h, inp):
+        xq, dq, bq, cq = inp                                # (B,Q,C) … (B,Q,N)
+        da = jnp.exp(dq[..., None] * A)                     # (B,Q,C,N)
+        u = (dq * xq)[..., None] * bq[:, :, None, :]        # (B,Q,C,N)
+        # fold incoming state into the first step
+        u = u.at[:, 0].add(da[:, 0] * h)
+        a_all, h_all = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]), (da, u), axis=1)
+        y = jnp.einsum("bqcn,bqn->bqc", h_all, cq)
+        return h_all[:, -1], y
+
+    chunk_body = jax.checkpoint(chunk_body)
+    h0 = jnp.zeros((B, C, N), F32)
+    h_last, ys = jax.lax.scan(
+        chunk_body, h0,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtc, 1, 0),
+         jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, C)[:, :S0]
+    y = y + p["D_skip"] * xs.astype(F32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsc,cd->bsd", y, p["wo"])
+    out = ctx.constrain(out, ("batch", "seq", None))
+    if not return_state:
+        return out
+    K = s.d_conv - 1
+    state = {"conv_x": xs_pre[:, S - K:, :].astype(cfg.pdtype), "ssm": h_last}
+    return out, state
+
+
+def mamba1_step(cfg: ModelConfig, p, xt, state, ctx: ShardCtx):
+    """Decode step. xt (B,D); state: conv_x (B,K-1,C), ssm (B,C,N)."""
+    s = cfg.ssm
+    C, N = cfg.d_inner, s.d_state
+    z, xs, _, _ = _mamba1_inputs(cfg, p, xt[:, None, :])
+    z, xs = z[:, 0], xs[:, 0]
+    st_x, xs = conv_step(state["conv_x"], xs, p["conv_x"], p["conv_x_b"])
+    xs = jax.nn.silu(xs)
+    dt, Bm, Cm = _mamba1_ssm_params(cfg, p, xs[:, None, :])
+    dt, Bm, Cm = dt[:, 0], Bm[:, 0], Cm[:, 0]                # (B,C),(B,N)
+    A = -jnp.exp(p["A_log"].astype(F32))
+    da = jnp.exp(dt[..., None] * A)                          # (B,C,N)
+    h = state["ssm"] * da + (dt * xs.astype(F32))[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", h, Cm)
+    y = y + p["D_skip"] * xs.astype(F32)
+    y = y.astype(xt.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bc,cd->bd", y, p["wo"])
+    return out, {"conv_x": st_x, "ssm": h}
+
+
+def mamba1_state_defs(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    C, N = cfg.d_inner, s.d_state
+    return {
+        "conv_x": pd((batch, s.d_conv - 1, C), ("batch", "conv", "d_inner"),
+                     init="zeros", dtype=cfg.pdtype),
+        "ssm": pd((batch, C, N), ("batch", "d_inner", None), init="zeros",
+                  dtype=jnp.float32),
+    }
+
+
+def mamba_defs(cfg: ModelConfig):
+    return mamba2_defs(cfg) if cfg.ssm.version == 2 else mamba1_defs(cfg)
+
+
+def mamba_mixer(cfg: ModelConfig, p, x, ctx: ShardCtx):
+    fn = mamba2_mixer if cfg.ssm.version == 2 else mamba1_mixer
+    return fn(cfg, p, x, ctx)

@@ -1,0 +1,54 @@
+"""Model facade: one API over the LM stack and the enc-dec stack.
+
+``model_defs(cfg)`` → parameter-definition tree
+``loss_fn(cfg, params, batch, ctx)`` → (loss, metrics)
+``synth_batch(cfg, batch, seq, key)`` → real random batch (tests/examples)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer, whisper
+from repro.sharding.axes import ShardCtx
+
+
+def model_defs(cfg: ModelConfig):
+    if cfg.enc_dec:
+        return whisper.encdec_defs(cfg)
+    return transformer.lm_defs(cfg)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ctx: ShardCtx):
+    if cfg.enc_dec:
+        return whisper.encdec_loss(cfg, params, batch, ctx)
+    return transformer.lm_loss(cfg, params, batch, ctx)
+
+
+def synth_batch(cfg: ModelConfig, batch: int, seq: int, key: jax.Array):
+    """Random batch with the right structure for `loss_fn` (smoke/tests)."""
+    kt, kf = jax.random.split(key)
+    if cfg.enc_dec:
+        td = min(cfg.max_decoder_len, 32)
+        tokens = jax.random.randint(kt, (batch, td + 1), 0, cfg.vocab)
+        return {
+            "frames": jax.random.normal(kf, (batch, seq, cfg.d_model),
+                                        jnp.float32) * 0.1,
+            "tokens": tokens[:, :-1],
+            "targets": tokens[:, 1:],
+            "mask": jnp.ones((batch, td), jnp.float32),
+        }
+    tokens = jax.random.randint(kt, (batch, seq + 1), 0, cfg.vocab)
+    out = {
+        "tokens": tokens[:, :-1],
+        "targets": tokens[:, 1:],
+        "mask": jnp.ones((batch, seq), jnp.float32),
+    }
+    if cfg.frontend != "none":
+        ft = min(cfg.frontend_tokens, seq // 2)
+        out["frontend_embed"] = jax.random.normal(
+            kf, (batch, ft, cfg.frontend_dim), jnp.float32) * 0.1
+        mask = out["mask"].at[:, :ft].set(0.0)  # no loss on patch positions
+        out["mask"] = mask
+    return out

@@ -1,0 +1,206 @@
+"""Unified decoder stack for all LM-family architectures.
+
+The per-layer structure (mixer kind, window, dense/MoE ffn) is derived from
+the config into a list of :class:`BlockCfg`, then automatically compressed
+into repeating :class:`Segment`s (gemma2 → (local, global)×13, jamba →
+8-slot pattern ×4, deepseek → dense ×1 + moe ×59 …). Each segment is
+executed with ``lax.scan`` over stacked parameters + full activation remat,
+which keeps compile time and activation memory bounded for the 60-layer
+236 B-param dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (chunked_ce_loss, embed, embed_defs, mlp,
+                                 mlp_defs, rmsnorm, rmsnorm_def, unembed_defs)
+from repro.sharding import params as prm
+from repro.sharding.axes import ShardCtx
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class BlockCfg:
+    mixer: str          # "attn" | "mamba"
+    window: int         # 0 = full attention
+    ffn: str            # "dense" | "moe" | "none"
+    d_ff: int
+
+
+@dataclass(frozen=True)
+class Segment:
+    pattern: tuple[BlockCfg, ...]
+    repeat: int
+
+
+def block_cfg_for_layer(cfg: ModelConfig, i: int) -> BlockCfg:
+    mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+    window = cfg.window_for_layer(i) if mixer == "attn" else 0
+    if cfg.d_ff == 0 and cfg.moe is None:
+        ffn, d_ff = "none", 0
+    elif cfg.is_moe_layer(i):
+        ffn, d_ff = "moe", cfg.moe.d_expert
+    elif cfg.moe is not None and i < cfg.moe.first_dense:
+        ffn, d_ff = "dense", cfg.moe.dense_d_ff or cfg.d_ff
+    else:
+        ffn, d_ff = "dense", cfg.d_ff
+    return BlockCfg(mixer, window, ffn, d_ff)
+
+
+def layer_schedule(cfg: ModelConfig, n_layers: int | None = None,
+                   blocks=None) -> tuple[Segment, ...]:
+    """Compress the per-layer block list into maximal repeating segments."""
+    n = n_layers if n_layers is not None else cfg.n_layers
+    if blocks is None:
+        blocks = [block_cfg_for_layer(cfg, i) for i in range(n)]
+    segs: list[Segment] = []
+    i = 0
+    while i < len(blocks):
+        best_plen, best_reps = 1, 1
+        for plen in range(1, min(16, len(blocks) - i) + 1):
+            pat = blocks[i:i + plen]
+            reps = 1
+            while blocks[i + reps * plen:i + (reps + 1) * plen] == pat:
+                reps += 1
+            if reps > 1 and reps * plen > best_plen * best_reps:
+                best_plen, best_reps = plen, reps
+        segs.append(Segment(tuple(blocks[i:i + best_plen]), best_reps))
+        i += best_plen * best_reps
+    assert sum(s.repeat * len(s.pattern) for s in segs) == len(blocks)
+    return tuple(segs)
+
+
+# ------------------------------------------------------------------ blocks
+def block_defs(cfg: ModelConfig, bc: BlockCfg):
+    d = {"norm1": rmsnorm_def(cfg.d_model)}
+    if bc.mixer == "attn":
+        d["attn"] = attn_mod.attn_defs(cfg)
+    else:
+        d["mamba"] = mamba_mod.mamba_defs(cfg)
+    if cfg.use_post_norm:
+        d["post1"] = rmsnorm_def(cfg.d_model)
+    if bc.ffn != "none":
+        d["norm2"] = rmsnorm_def(cfg.d_model)
+        if bc.ffn == "moe":
+            d["moe"] = moe_mod.moe_defs(cfg)
+        else:
+            d["mlp"] = mlp_defs(dataclasses.replace(cfg), bc.d_ff)
+        if cfg.use_post_norm:
+            d["post2"] = rmsnorm_def(cfg.d_model)
+    return d
+
+
+def block_apply(cfg: ModelConfig, bc: BlockCfg, p, h, ctx: ShardCtx,
+                positions, causal: bool = True):
+    """h (B,S,D) seq-sharded → (h', moe stats (2,E) or None)."""
+    x = rmsnorm(h, p["norm1"], cfg.norm_eps)
+    # explicit SP boundary on bf16 (keeps GSPMD from hoisting gathers into
+    # the f32 norm internals); each mixer picks its own internal layout
+    x = ctx.constrain(x, ("batch", "seq", None))
+    if bc.mixer == "attn":
+        y = attn_mod.attention(cfg, p["attn"], x, ctx, window=bc.window,
+                               positions=positions, causal=causal)
+    else:
+        y = mamba_mod.mamba_mixer(cfg, p["mamba"], x, ctx)
+    if cfg.use_post_norm:
+        y = rmsnorm(y, p["post1"], cfg.norm_eps)
+    h = h + y
+    stats = None
+    if bc.ffn != "none":
+        x = rmsnorm(h, p["norm2"], cfg.norm_eps)
+        if bc.ffn == "moe":
+            y, stats = moe_mod.moe_block(cfg, p["moe"], x, ctx)
+        else:
+            y = mlp(cfg, p["mlp"], x, ctx)
+        if cfg.use_post_norm:
+            y = rmsnorm(y, p["post2"], cfg.norm_eps)
+        h = h + y
+    return h, stats
+
+
+# ------------------------------------------------------------------- stack
+def stack_defs(cfg: ModelConfig, segments):
+    seg_defs = []
+    for seg in segments:
+        slot = {f"s{j}": block_defs(cfg, bc) for j, bc in enumerate(seg.pattern)}
+        seg_defs.append(prm.stack(slot, seg.repeat))
+    return seg_defs
+
+
+def apply_stack(cfg: ModelConfig, segments, seg_params, h, ctx: ShardCtx,
+                positions, causal: bool = True):
+    """Returns (h, summed moe stats (2,E) or None)."""
+    total_stats = None
+
+    for seg, sp in zip(segments, seg_params):
+
+        def body(hc, slot_params, seg=seg):
+            stats_acc = None
+            for j, bc in enumerate(seg.pattern):
+                hc, st = block_apply(cfg, bc, slot_params[f"s{j}"], hc, ctx,
+                                     positions, causal)
+                if st is not None:
+                    stats_acc = st if stats_acc is None else stats_acc + st
+            if stats_acc is None and cfg.moe is not None:
+                stats_acc = jnp.zeros((2, cfg.moe.n_experts), F32)
+            return hc, stats_acc
+
+        body = jax.checkpoint(body, prevent_cse=False)
+
+        def scan_body(hc, slot_params):
+            return body(hc, slot_params)
+
+        h, ys = jax.lax.scan(scan_body, h, sp)
+        if ys is not None and cfg.moe is not None:
+            st = jnp.sum(ys, axis=0)
+            total_stats = st if total_stats is None else total_stats + st
+    return h, total_stats
+
+
+# ----------------------------------------------------------------- LM model
+def lm_defs(cfg: ModelConfig):
+    segments = layer_schedule(cfg)
+    return {
+        "embed": embed_defs(cfg),
+        "blocks": stack_defs(cfg, segments),
+        "final_norm": rmsnorm_def(cfg.d_model),
+        "unembed": unembed_defs(cfg),
+    }
+
+
+def lm_hidden(cfg: ModelConfig, params, tokens, ctx: ShardCtx,
+              frontend_embed=None):
+    """tokens (B,S) → final hidden states (B,S,D) seq-sharded."""
+    segments = layer_schedule(cfg)
+    h = embed(cfg, params["embed"], tokens, ctx, frontend_embed)
+    positions = jnp.arange(tokens.shape[1])
+    h, stats = apply_stack(cfg, segments, params["blocks"], h, ctx, positions)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return h, stats
+
+
+def lm_loss(cfg: ModelConfig, params, batch, ctx: ShardCtx):
+    """batch: tokens/targets/mask (+frontend_embed). → (loss, metrics)."""
+    h, stats = lm_hidden(cfg, params, batch["tokens"], ctx,
+                         batch.get("frontend_embed"))
+    sum_l, sum_c = chunked_ce_loss(cfg, params["embed"], params["unembed"], h,
+                                   batch["targets"], batch["mask"], ctx)
+    ce = sum_l / jnp.maximum(sum_c, 1.0)
+    metrics = {"ce": ce, "tokens": sum_c}
+    loss = ce
+    if cfg.moe is not None and stats is not None:
+        n_moe = sum(1 for i in range(cfg.n_layers) if cfg.is_moe_layer(i))
+        aux = moe_mod.aux_loss_from_stats(cfg, stats / max(n_moe, 1))
+        metrics["moe_aux"] = aux
+        loss = loss + aux
+    metrics["loss"] = loss
+    return loss, metrics

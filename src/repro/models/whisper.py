@@ -1,0 +1,130 @@
+"""Whisper-style encoder-decoder (audio family).
+
+Per the assignment, the conv/mel frontend is a STUB: the batch provides
+post-conv frame embeddings (B, frames, d_model). Positions are fixed
+sinusoids (encoder) / learned (decoder). Decoder blocks = causal self-attn +
+cross-attn + MLP; cross-KV per layer is computed from the encoder output
+inside the scanned block (enc_out is scan-invariant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.layers import (chunked_ce_loss, mlp, mlp_defs, rmsnorm,
+                                 rmsnorm_def)
+from repro.sharding import params as prm
+from repro.sharding.axes import ShardCtx
+from repro.sharding.params import pd
+
+F32 = jnp.float32
+
+
+def sinusoids(length: int, channels: int) -> jnp.ndarray:
+    """Whisper's fixed sinusoidal positional embedding."""
+    scale = jnp.exp(-jnp.log(10000.0) / (channels // 2 - 1)
+                    * jnp.arange(channels // 2, dtype=F32))
+    t = jnp.arange(length, dtype=F32)[:, None] * scale[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+# ------------------------------------------------------------------- defs
+def enc_block_defs(cfg: ModelConfig):
+    return {
+        "norm1": rmsnorm_def(cfg.d_model),
+        "attn": attn_mod.gqa_defs(cfg),
+        "norm2": rmsnorm_def(cfg.d_model),
+        "mlp": mlp_defs(cfg, cfg.d_ff),
+    }
+
+
+def dec_block_defs(cfg: ModelConfig):
+    return {
+        "norm1": rmsnorm_def(cfg.d_model),
+        "self_attn": attn_mod.gqa_defs(cfg),
+        "norm_x": rmsnorm_def(cfg.d_model),
+        "cross": attn_mod.cross_attn_defs(cfg),
+        "norm2": rmsnorm_def(cfg.d_model),
+        "mlp": mlp_defs(cfg, cfg.d_ff),
+    }
+
+
+def encdec_defs(cfg: ModelConfig):
+    return {
+        "embed": {"table": pd((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                              dtype=cfg.pdtype)},
+        "dec_pos": pd((cfg.max_decoder_len, cfg.d_model), (None, "embed"),
+                      scale=0.01, dtype=cfg.pdtype),
+        "enc_blocks": prm.stack(enc_block_defs(cfg), cfg.n_enc_layers),
+        "enc_norm": rmsnorm_def(cfg.d_model),
+        "dec_blocks": prm.stack(dec_block_defs(cfg), cfg.n_layers),
+        "dec_norm": rmsnorm_def(cfg.d_model),
+        "unembed": {},  # tied to embed.table
+    }
+
+
+# ------------------------------------------------------------------ encode
+def encode(cfg: ModelConfig, params, frames, ctx: ShardCtx):
+    """frames (B, S_enc, d_model) stub embeddings → encoder states."""
+    h = frames.astype(cfg.pdtype) + sinusoids(
+        frames.shape[1], cfg.d_model).astype(cfg.pdtype)[None]
+    h = ctx.constrain(h, ("batch", "seq", None))
+    positions = jnp.arange(frames.shape[1])
+
+    def body(hc, p):
+        x = rmsnorm(hc, p["norm1"], cfg.norm_eps)
+        x = ctx.constrain(x, ("batch", "seq", None))
+        y = attn_mod.attention(cfg, p["attn"], x, ctx, window=0,
+                               positions=positions, causal=False)
+        hc = hc + y
+        x = rmsnorm(hc, p["norm2"], cfg.norm_eps)
+        hc = hc + mlp(cfg, p["mlp"], x, ctx)
+        return hc, None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------ decode
+def decode_hidden(cfg: ModelConfig, params, tokens, enc_out, ctx: ShardCtx):
+    """tokens (B, Td) → decoder hidden (B, Td, D)."""
+    h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.pdtype)
+    h = h + params["dec_pos"][None, :tokens.shape[1]]
+    h = ctx.constrain(h, ("batch", "seq", None))
+    positions = jnp.arange(tokens.shape[1])
+    # gather encoder states once; each decoder layer builds its own KV
+    enc_out = ctx.constrain(enc_out, ("batch", None, None))
+
+    def body(hc, p):
+        x = rmsnorm(hc, p["norm1"], cfg.norm_eps)
+        x = ctx.constrain(x, ("batch", "seq", None))
+        hc = hc + attn_mod.attention(cfg, p["self_attn"], x, ctx, window=0,
+                                     positions=positions, causal=True)
+        # cross attention: the ≤448-token decoder side is replicated over
+        # `model` (tiny); encoder KV stays gathered — no in-scan collectives
+        x = rmsnorm(hc, p["norm_x"], cfg.norm_eps)
+        x = ctx.constrain(x, ("batch", None, None))
+        k, v = attn_mod.cross_kv(cfg, p["cross"], enc_out, ctx)
+        y = attn_mod.cross_attention(cfg, p["cross"], x, k, v, ctx)
+        hc = hc + ctx.constrain(y, ("batch", "seq", None))
+        x = rmsnorm(hc, p["norm2"], cfg.norm_eps)
+        hc = hc + mlp(cfg, p["mlp"], x, ctx)
+        return hc, None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["dec_blocks"])
+    return rmsnorm(h, params["dec_norm"], cfg.norm_eps)
+
+
+def encdec_loss(cfg: ModelConfig, params, batch, ctx: ShardCtx):
+    """batch: frames (B,Se,D), tokens/targets/mask (B,Td)."""
+    enc_out = encode(cfg, params, batch["frames"], ctx)
+    h = decode_hidden(cfg, params, batch["tokens"], enc_out, ctx)
+    sum_l, sum_c = chunked_ce_loss(cfg, params["embed"], params["unembed"], h,
+                                   batch["targets"], batch["mask"], ctx,
+                                   chunk=min(512, batch["tokens"].shape[1]))
+    ce = sum_l / jnp.maximum(sum_c, 1.0)
+    return ce, {"ce": ce, "loss": ce, "tokens": sum_c}

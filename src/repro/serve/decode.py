@@ -1,0 +1,315 @@
+"""Single-token decode with flash-decoding (sequence-parallel KV attention).
+
+The KV cache's sequence dim is sharded over ``model``; each shard computes
+attention partials (o, m, l) over its slice and the exact softmax is
+reconstructed with a max/psum tree — the TPU analogue of flash-decoding.
+Cache writes are *local masked* updates inside the same shard_map (the
+writing shard is the one whose slice contains `pos`) — no cross-shard
+scatter appears in the HLO. Per-sequence positions (B,) support continuous
+batching; sliding-window layers use ring addressing (pos mod window).
+
+MLA decodes in the compressed latent space via the absorbed-weights trick:
+the cache row *is* both key and value (MQA-style, dim kv_lora+rope).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import apply_rope, mlp, rmsnorm, rope_tables, _softcap
+from repro.models.transformer import layer_schedule
+from repro.sharding.axes import ShardCtx
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+# ------------------------------------------------------------ flash decode
+def _combine(o, m, l):
+    """Cross-shard exact-softmax combine of (o, m, l) partials."""
+    m_g = jax.lax.pmax(m, "model")
+    m_safe = jnp.where(m_g <= NEG / 2, 0.0, m_g)
+    c = jnp.exp(jnp.where(m <= NEG / 2, NEG, m) - m_safe)
+    o = jax.lax.psum(o * c[..., None], "model")
+    l = jax.lax.psum(l * c, "model")
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+def _local_write(cache, new_row, rel):
+    """cache (B, S_loc, …), new_row (B, …), rel (B,) local index (may be out
+    of this shard's range → masked no-op)."""
+    B, S_loc = cache.shape[0], cache.shape[1]
+    in_range = (rel >= 0) & (rel < S_loc)
+    relc = jnp.clip(rel, 0, S_loc - 1)
+    b = jnp.arange(B)
+    cur = cache[b, relc]                                   # (B, …)
+    mask = in_range.reshape((B,) + (1,) * (cache.ndim - 2))
+    upd = jnp.where(mask, new_row, cur)
+    return cache.at[b, relc].set(upd)
+
+
+def flash_decode_gqa(q, k_new, v_new, ck, cv, pos, *, window: int,
+                     scale: float, softcap: float, ctx: ShardCtx,
+                     update: bool = True):
+    """q (B,Hkv,G,dh); k_new/v_new (B,Hkv,dh); ck/cv (B,Sc,Hkv,dh) kv_seq-
+    sharded; pos (B,). → (out (B,Hkv,G,dh), ck', cv').
+
+    update=False → attend-only (whisper cross-attention; pos = valid_len-1).
+    """
+    mesh = ctx.mesh
+    bp = ctx.spec(("batch", None, None, None), q.shape)[0]
+    qspec = P(bp, None, None, None)
+    nspec = P(bp, None, None)
+    cspec = ctx.spec(("batch", "kv_seq", "kv_heads", None), ck.shape)
+    pspec = P(bp)
+
+    def local(q, kn, vn, ck, cv, pos):
+        i = jax.lax.axis_index("model")
+        B, S_loc = ck.shape[0], ck.shape[1]
+        msize = jax.lax.axis_size("model")
+        S_tot = S_loc * msize
+        if update:
+            wpos = pos % S_tot if window else pos       # ring for windows
+            rel = wpos - i * S_loc
+            ck = _local_write(ck, kn, rel)
+            cv = _local_write(cv, vn, rel)
+        gpos = i * S_loc + jnp.arange(S_loc)            # (S_loc,) slot ids
+        if window:
+            # slot j holds absolute position p_j = pos - ((pos - j) mod S_tot)
+            p_j = pos[:, None] - ((pos[:, None] - gpos[None]) % S_tot)
+            valid = (p_j >= 0) & (p_j > pos[:, None] - window)
+        else:
+            valid = gpos[None] <= pos[:, None]          # (B, S_loc)
+        s = jnp.einsum("bhgd,bshd->bhgs", q.astype(F32) * scale,
+                       ck.astype(F32))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(valid[:, None, None], s, NEG)
+        m = jnp.max(s, -1)
+        m_safe = jnp.where(m <= NEG / 2, 0.0, m)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[:, None, None], p, 0.0)
+        o = jnp.einsum("bhgs,bshd->bhgd", p, cv.astype(F32))
+        l = jnp.sum(p, -1)
+        return _combine(o, m, l).astype(q.dtype), ck, cv
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(qspec, nspec, nspec, cspec, cspec, pspec),
+                   out_specs=(qspec, cspec, cspec), check_rep=False)
+    return fn(q, k_new, v_new, ck, cv, pos)
+
+
+def flash_decode_mla(q_eff, new_row, ckv, pos, *, kv_lora: int, scale: float,
+                     ctx: ShardCtx):
+    """q_eff (B,H,R); new_row (B,R); ckv (B,Sc,R). Key = cache row, value =
+    first kv_lora dims of the same row."""
+    mesh = ctx.mesh
+    bp = ctx.spec(("batch", None, None), q_eff.shape)[0]
+    qspec = P(bp, None, None)
+    nspec = P(bp, None)
+    cspec = ctx.spec(("batch", "kv_seq", None), ckv.shape)
+    pspec = P(bp)
+
+    def local(q, row, ckv, pos):
+        i = jax.lax.axis_index("model")
+        B, S_loc, R = ckv.shape
+        rel = pos - i * S_loc
+        ckv = _write3(ckv, row, rel)
+        gpos = i * S_loc + jnp.arange(S_loc)
+        valid = gpos[None] <= pos[:, None]
+        s = jnp.einsum("bhr,bsr->bhs", q.astype(F32) * scale,
+                       ckv.astype(F32))
+        s = jnp.where(valid[:, None], s, NEG)
+        m = jnp.max(s, -1)
+        m_safe = jnp.where(m <= NEG / 2, 0.0, m)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[:, None], p, 0.0)
+        o = jnp.einsum("bhs,bsr->bhr", p, ckv[..., :kv_lora].astype(F32))
+        l = jnp.sum(p, -1)
+        return _combine(o, m, l).astype(q.dtype), ckv
+
+    _write3 = _local_write
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(qspec, nspec, cspec, pspec),
+                   out_specs=(qspec, cspec), check_rep=False)
+    return fn(q_eff, new_row, ckv, pos)
+
+
+# --------------------------------------------------------- per-block decode
+def gqa_decode(cfg: ModelConfig, p, x, cache, pos, window, ctx: ShardCtx):
+    """x (B,D) → (out (B,D), new cache)."""
+    B = x.shape[0]
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x, p["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x, p["wv"])
+    if cfg.use_rope:
+        cos, sin = rope_tables(pos, cfg.head_dim, cfg.rope_theta)  # (B, dh/2)
+        q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+        k = apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, cfg.n_kv_heads, G, cfg.head_dim)
+    out, ck, cv = flash_decode_gqa(
+        qg, k, v, cache["k"], cache["v"], pos, window=window,
+        scale=cfg.head_dim ** -0.5, softcap=cfg.attn_softcap, ctx=ctx)
+    out = out.reshape(B, cfg.n_heads * cfg.head_dim)
+    o = jnp.einsum("bk,kd->bd",
+                   out, p["wo"].reshape(-1, cfg.d_model))
+    return ctx.constrain(o, ("batch", None)), {"k": ck, "v": cv}
+
+
+def mla_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ShardCtx):
+    m = cfg.mla
+    B = x.shape[0]
+    x3 = x[:, None, :]
+    # queries
+    cq = rmsnorm(jnp.einsum("bd,dr->br", x, p["wdq"]), p["q_norm"],
+                 cfg.norm_eps)
+    q = jnp.einsum("br,rhk->bhk", cq, p["wuq"])
+    qn, qr = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    cos, sin = rope_tables(pos, m.rope_dim, cfg.rope_theta)
+    qr = apply_rope(qr[:, None], cos[:, None], sin[:, None])[:, 0]
+    # absorbed query: q_c = qn · W_uk  → latent space
+    wuk = p["wukv"][..., :m.nope_dim]                  # (R, H, nope)
+    q_c = jnp.einsum("bhn,rhn->bhr", qn, wuk)          # (B, H, kv_lora)
+    q_eff = jnp.concatenate([q_c, qr], axis=-1)
+    # new cache row
+    ckv_t = rmsnorm(jnp.einsum("bd,dr->br", x, p["wdkv"]), p["kv_norm"],
+                    cfg.norm_eps)
+    kr_t = jnp.einsum("bd,dr->br", x, p["wkr"])
+    kr_t = apply_rope(kr_t[:, None, None], cos[:, None], sin[:, None])[:, 0, 0]
+    row = jnp.concatenate([ckv_t, kr_t], axis=-1).astype(cache["ckv"].dtype)
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+    o_c, ckv = flash_decode_mla(q_eff, row, cache["ckv"], pos,
+                                kv_lora=m.kv_lora, scale=scale, ctx=ctx)
+    # un-absorb values: o = (o_c · W_uv) then output proj
+    wuv = p["wukv"][..., m.nope_dim:]                  # (R, H, v)
+    o = jnp.einsum("bhr,rhv->bhv", o_c, wuv)
+    o = jnp.einsum("bhv,hvd->bd", o, p["wo"])
+    return ctx.constrain(o, ("batch", None)), {"ckv": ckv}
+
+
+def block_decode(cfg: ModelConfig, bc, p, cache, h, pos, ctx: ShardCtx):
+    x = rmsnorm(h, p["norm1"], cfg.norm_eps)
+    if bc.mixer == "attn":
+        if cfg.mla:
+            y, new_cache = mla_decode(cfg, p["attn"], x, cache, pos, ctx)
+        else:
+            y, new_cache = gqa_decode(cfg, p["attn"], x, cache, pos,
+                                      bc.window, ctx)
+    else:
+        step = (mamba_mod.mamba2_step if cfg.ssm.version == 2
+                else mamba_mod.mamba1_step)
+        y, new_cache = step(cfg, p["mamba"], x, cache, ctx)
+    if cfg.use_post_norm:
+        y = rmsnorm(y, p["post1"], cfg.norm_eps)
+    h = h + y
+    if bc.ffn != "none":
+        x = rmsnorm(h, p["norm2"], cfg.norm_eps)
+        if bc.ffn == "moe":
+            y = moe_mod.moe_decode(cfg, p["moe"], x, ctx)
+        else:
+            y = mlp(cfg, p["mlp"], x[:, None], ctx)[:, 0]
+        if cfg.use_post_norm:
+            y = rmsnorm(y, p["post2"], cfg.norm_eps)
+        h = h + y
+    return h, new_cache
+
+
+# ------------------------------------------------------------- decode step
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, ctx: ShardCtx):
+    """tokens (B,), pos (B,) → (logits (B,V) f32 vocab-sharded, new cache)."""
+    segments = layer_schedule(cfg)
+    h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.pdtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    h = ctx.constrain(h, ("batch", None))
+    new_blocks = []
+    for seg, sp, sc in zip(segments, params["blocks"], cache["blocks"]):
+
+        def body(hc, xs, seg=seg):
+            slot_params, slot_cache = xs
+            new_slot = {}
+            for j, bc in enumerate(seg.pattern):
+                hc, nc = block_decode(cfg, bc, slot_params[f"s{j}"],
+                                      slot_cache[f"s{j}"], hc, pos, ctx)
+                new_slot[f"s{j}"] = nc
+            return hc, new_slot
+
+        h, new_sc = jax.lax.scan(body, h, (sp, sc))
+        new_blocks.append(new_sc)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"]["table"].T if cfg.tie_embeddings
+         else params["unembed"]["w"])
+    logits = jnp.einsum("bd,dv->bv", h, w.astype(h.dtype),
+                        preferred_element_type=F32)
+    logits = _softcap(logits, cfg.final_softcap)
+    logits = ctx.constrain(logits, ("batch", "vocab"))
+    return logits, {"blocks": new_blocks}
+
+
+# ---------------------------------------------------- whisper decode step
+def whisper_decode_step(cfg: ModelConfig, params, cache, tokens, pos,
+                        ctx: ShardCtx):
+    """Decoder step against per-layer self cache + prefilled cross KV."""
+    h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.pdtype)
+    h = h + jnp.take(params["dec_pos"],
+                     jnp.clip(pos, 0, cfg.max_decoder_len - 1), axis=0)
+    h = ctx.constrain(h, ("batch", None))
+    G = cfg.n_heads // cfg.n_kv_heads
+
+    def body(hc, xs):
+        p, c = xs
+        B = hc.shape[0]
+        x = rmsnorm(hc, p["norm1"], cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", x, p["self_attn"]["wq"])
+        k = jnp.einsum("bd,dhk->bhk", x, p["self_attn"]["wk"])
+        v = jnp.einsum("bd,dhk->bhk", x, p["self_attn"]["wv"])
+        qg = q.reshape(B, cfg.n_kv_heads, G, cfg.head_dim)
+        o, ck, cv = flash_decode_gqa(qg, k, v, c["k"], c["v"], pos, window=0,
+                                     scale=cfg.head_dim ** -0.5, softcap=0.0,
+                                     ctx=ctx)
+        o = jnp.einsum("bk,kd->bd", o.reshape(B, -1),
+                       p["self_attn"]["wo"].reshape(-1, cfg.d_model))
+        hc = hc + ctx.constrain(o, ("batch", None))
+        # cross attention against the (static) prefilled cross KV
+        x = rmsnorm(hc, p["norm_x"], cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", x, p["cross"]["wq"])
+        qg = q.reshape(B, cfg.n_kv_heads, G, cfg.head_dim)
+        enc_len = jnp.full((B,), c["xk"].shape[1] - 1, jnp.int32)
+        o, _, _ = flash_decode_gqa(qg, jnp.zeros_like(k), jnp.zeros_like(v),
+                                   c["xk"], c["xv"],
+                                   enc_len, window=0,
+                                   scale=cfg.head_dim ** -0.5, softcap=0.0,
+                                   ctx=ctx, update=False)
+        o = jnp.einsum("bk,kd->bd", o.reshape(B, -1),
+                       p["cross"]["wo"].reshape(-1, cfg.d_model))
+        hc = hc + ctx.constrain(o, ("batch", None))
+        x = rmsnorm(hc, p["norm2"], cfg.norm_eps)
+        hc = hc + mlp(cfg, p["mlp"], x[:, None], ctx)[:, 0]
+        return hc, {"k": ck, "v": cv, "xk": c["xk"], "xv": c["xv"]}
+
+    h, new_dec = jax.lax.scan(body, h, (params["dec_blocks"],
+                                        cache["dec_blocks"]))
+    h = rmsnorm(h, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h,
+                        params["embed"]["table"].T.astype(h.dtype),
+                        preferred_element_type=F32)
+    logits = ctx.constrain(logits, ("batch", "vocab"))
+    return logits, {"dec_blocks": new_dec}
+
+
+def serve_step_fn(cfg: ModelConfig, ctx: ShardCtx):
+    fn = whisper_decode_step if cfg.enc_dec else decode_step
+
+    def step(params, cache, tokens, pos):
+        return fn(cfg, params, cache, tokens, pos, ctx)
+
+    return step

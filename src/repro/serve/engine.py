@@ -1,0 +1,131 @@
+"""Continuous-batching serving engine.
+
+Slot-based: a fixed decode batch of `max_slots` sequences; finished slots
+are refilled by prefilling pending requests and inserting their caches at
+the slot index. Admission control follows the paper's scheduling law: the
+number of prefills admitted per cycle is an HBB chunk — the accelerator
+class is the decode batch (fixed quantum), prefill admission is the
+adaptive `S_c` side, driven by the measured prefill:decode throughput ratio
+`f` (so a long prompt backlog can't starve decode, and vice versa).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.chunking import cpu_chunk
+from repro.core.tracker import ThroughputTracker
+from repro.models.model import model_defs
+from repro.serve.decode import decode_step
+from repro.serve.kv_cache import cache_defs
+from repro.serve.prefill import prefill
+from repro.sharding import params as prm
+from repro.sharding.axes import ShardCtx
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ctx: ShardCtx, *,
+                 max_slots: int = 4, max_len: int = 128, eos_id: int = -1):
+        assert not cfg.enc_dec, "enc-dec serving uses whisper_decode_step"
+        self.cfg, self.params, self.ctx = cfg, params, ctx
+        self.max_slots, self.max_len, self.eos_id = max_slots, max_len, eos_id
+        msize = ctx.axis_size("model")
+        self.cache = prm.materialize(
+            cache_defs(cfg, max_slots, max_len, msize), jax.random.PRNGKey(0))
+        self.pos = np.zeros(max_slots, np.int32)       # next write position
+        self.slot_req: list[Optional[Request]] = [None] * max_slots
+        self.pending: list[Request] = []
+        self.tracker = ThroughputTracker(
+            {"decode": "accelerator", "prefill": "core"}, f0=2.0)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos, ctx))
+        self._prefill = jax.jit(
+            lambda p, t: prefill(cfg, p, t, ctx, max_len=max_len))
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    # ---- cache slot insertion (jitted scatter on the batch dim) ----------
+    def _insert_impl(self, cache, one_cache, slot):
+        # cache leaves are (repeat, batch, …) — batch is axis 1
+        def ins(c, o):
+            return jax.lax.dynamic_update_slice_in_dim(c, o.astype(c.dtype),
+                                                       slot, 1)
+        return jax.tree.map(ins, cache, one_cache)
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    # ---- one engine cycle -------------------------------------------------
+    def step(self) -> None:
+        free = self.free_slots()
+        if self.pending and free:
+            r = len(self.pending)
+            admit = cpu_chunk(S_f=self.max_slots, f=self.tracker.f(), r=r,
+                              n_cores=1)
+            admit = max(1, min(admit, len(free), r))
+            t0 = time.perf_counter()
+            for _ in range(admit):
+                req = self.pending.pop(0)
+                slot = self.free_slots()[0]
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, one_cache = self._prefill(self.params, toks)
+                self.cache = self._insert(self.cache, one_cache,
+                                          jnp.int32(slot))
+                nxt = int(jnp.argmax(logits[0]))
+                req.out.append(nxt)
+                self.slot_req[slot] = req
+                self.pos[slot] = len(req.prompt)
+            self.tracker.record("prefill", admit, time.perf_counter() - t0)
+
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        toks = np.zeros(self.max_slots, np.int32)
+        for i in active:
+            toks[i] = self.slot_req[i].out[-1]
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks),
+                                          jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        self.tracker.record("decode", len(active), time.perf_counter() - t0)
+        for i in active:
+            req = self.slot_req[i]
+            req.out.append(int(nxt[i]))
+            self.pos[i] += 1
+            if (len(req.out) >= req.max_new or int(nxt[i]) == self.eos_id
+                    or self.pos[i] >= self.max_len - 1):
+                req.done = True
+                self.slot_req[i] = None
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        for r in requests:
+            self.submit(r)
+        guard = 0
+        while (self.pending or any(self.slot_req)) and guard < 10_000:
+            self.step()
+            guard += 1
+        return requests
+
+
+def make_engine(cfg: ModelConfig, ctx: ShardCtx, seed: int = 0,
+                **kw) -> Engine:
+    params = prm.materialize(model_defs(cfg), jax.random.PRNGKey(seed))
+    return Engine(cfg, params, ctx, **kw)

@@ -1,0 +1,87 @@
+"""KV-cache layouts for every architecture family.
+
+GQA layers: (B, S_c, Hkv, dh) ×2 with the *sequence* dim sharded over
+``model`` (flash-decoding; DESIGN.md §3) — batch over (pod, data). Sliding-
+window layers allocate a ring buffer of exactly `window` slots (this is what
+makes h2o-danube's long_500k cell cheap: 4096-slot cache at 512 k context).
+MLA layers: one compressed (B, S_c, kv_lora+rope) tensor — the cache *is*
+the latent. Mamba layers: O(1) conv+ssm state. Whisper: tiny self cache
+(replicated S=448) + a seq-sharded cross-KV built at prefill.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba as mamba_mod
+from repro.models.transformer import BlockCfg, block_cfg_for_layer, layer_schedule
+from repro.sharding import params as prm
+from repro.sharding.params import pd
+
+
+def attn_cache_len(cfg: ModelConfig, window: int, seq_len: int,
+                   msize: int) -> int:
+    """Ring size for windowed layers, full length otherwise; padded so the
+    kv_seq dim stays divisible by the model axis."""
+    S = min(window, seq_len) if window else seq_len
+    return -(-S // msize) * msize
+
+
+def block_cache_defs(cfg: ModelConfig, bc: BlockCfg, batch: int,
+                     seq_len: int, msize: int):
+    if bc.mixer == "mamba":
+        fn = (mamba_mod.mamba2_state_defs if cfg.ssm.version == 2
+              else mamba_mod.mamba1_state_defs)
+        return fn(cfg, batch)
+    Sc = attn_cache_len(cfg, bc.window, seq_len, msize)
+    if cfg.mla:
+        R = cfg.mla.kv_lora + cfg.mla.rope_dim
+        return {"ckv": pd((batch, Sc, R), ("batch", "kv_seq", None),
+                          init="zeros", dtype=cfg.pdtype)}
+    return {
+        "k": pd((batch, Sc, cfg.n_kv_heads, cfg.head_dim),
+                ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                dtype=cfg.pdtype),
+        "v": pd((batch, Sc, cfg.n_kv_heads, cfg.head_dim),
+                ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                dtype=cfg.pdtype),
+    }
+
+
+def cache_defs(cfg: ModelConfig, batch: int, seq_len: int, msize: int):
+    """Full decode-cache def tree, mirroring the segment structure."""
+    if cfg.enc_dec:
+        return encdec_cache_defs(cfg, batch, seq_len, msize)
+    segments = layer_schedule(cfg)
+    segs = []
+    for seg in segments:
+        slot = {f"s{j}": block_cache_defs(cfg, bc, batch, seq_len, msize)
+                for j, bc in enumerate(seg.pattern)}
+        segs.append(prm.stack(slot, seg.repeat))
+    return {"blocks": segs}
+
+
+def encdec_cache_defs(cfg: ModelConfig, batch: int, enc_len: int, msize: int):
+    """Whisper: per-decoder-layer self cache + cross KV over encoder frames."""
+    Sd = -(-cfg.max_decoder_len // msize) * msize
+    Se = -(-enc_len // msize) * msize
+    slot = {
+        "k": pd((batch, Sd, cfg.n_kv_heads, cfg.head_dim),
+                ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                dtype=cfg.pdtype),
+        "v": pd((batch, Sd, cfg.n_kv_heads, cfg.head_dim),
+                ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                dtype=cfg.pdtype),
+        "xk": pd((batch, Se, cfg.n_kv_heads, cfg.head_dim),
+                 ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                 dtype=cfg.pdtype),
+        "xv": pd((batch, Se, cfg.n_kv_heads, cfg.head_dim),
+                 ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                 dtype=cfg.pdtype),
+    }
+    return {"dec_blocks": prm.stack(slot, cfg.n_layers)}
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, seq_len: int,
+                msize: int) -> int:
+    return prm.param_bytes(cache_defs(cfg, batch, seq_len, msize))

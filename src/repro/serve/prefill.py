@@ -1,0 +1,195 @@
+"""Prefill: full forward pass that also *builds* the decode cache.
+
+Reuses the training-stack projections (gqa_project / mla_latents / mamba
+mixers with return_state) so prefill and decode are numerically consistent
+with training — tested by decode-vs-full-forward equivalence tests.
+
+Cache layout matches serve.kv_cache exactly (kv_seq sharded over ``model``;
+ring layout for windowed layers: position p lands in slot p mod window).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import _softcap, embed, mlp, rmsnorm
+from repro.models.transformer import BlockCfg, layer_schedule
+from repro.models import whisper as whisper_mod
+from repro.serve.kv_cache import attn_cache_len
+from repro.sharding.axes import ShardCtx
+
+F32 = jnp.float32
+
+
+def _pad_to(k: jax.Array, Sc: int):
+    S = k.shape[1]
+    if S >= Sc:
+        return k[:, :Sc]
+    pad = [(0, 0), (0, Sc - S)] + [(0, 0)] * (k.ndim - 2)
+    return jnp.pad(k, pad)
+
+
+def _ring_pack(k: jax.Array, Sc: int):
+    """(B,S,…) → last-window entries laid out so pos p is at slot p mod Sc."""
+    S = k.shape[1]
+    if S <= Sc:
+        return _pad_to(k, Sc)
+    tail = k[:, S - Sc:]                       # positions S-Sc … S-1
+    shift = (S - Sc) % Sc
+    return jnp.roll(tail, shift, axis=1)
+
+
+def gqa_prefill(cfg: ModelConfig, p, x, ctx: ShardCtx, *, window, positions,
+                seq_len_cache: int):
+    """Attention + cache build. x (B,S,D) → (out, {"k","v"})."""
+    B, S = x.shape[:2]
+    if attn_mod._cp_eligible(cfg, ctx):
+        o, k, v = attn_mod.cp_gqa_attention(cfg, p, x, ctx, window=window,
+                                            causal=True, return_kv=True)
+    else:
+        q, k, v = attn_mod.gqa_project(cfg, p, x, ctx, positions)
+        scale = cfg.head_dim ** -0.5
+        out = attn_mod.attend_chunked(q, k, v, scale=scale, causal=True,
+                                      window=window,
+                                      softcap=cfg.attn_softcap,
+                                      q_chunk=cfg.attn_chunk,
+                                      kv_chunk=cfg.attn_chunk)
+        out = out.reshape(B, S, cfg.n_heads, cfg.head_dim)
+        o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        o = ctx.constrain(o, ("batch", "seq", None))
+    ck = _ring_pack(k, seq_len_cache) if window else _pad_to(k, seq_len_cache)
+    cv = _ring_pack(v, seq_len_cache) if window else _pad_to(v, seq_len_cache)
+    ck = ctx.constrain(ck, ("batch", "kv_seq", "kv_heads", None))
+    cv = ctx.constrain(cv, ("batch", "kv_seq", "kv_heads", None))
+    return o, {"k": ck, "v": cv}
+
+
+def mla_prefill(cfg: ModelConfig, p, x, ctx: ShardCtx, *, positions,
+                seq_len_cache: int | None = None):
+    m = cfg.mla
+    B, S, _ = x.shape
+    qn, qr = attn_mod.mla_queries(cfg, p, x, ctx, positions)
+    c_kv, k_r = attn_mod.mla_latents(cfg, p, x, ctx, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["wukv"])
+    kv = ctx.constrain(kv, ("batch", None, "heads", None))
+    kn, v = kv[..., :m.nope_dim], kv[..., m.nope_dim:]
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(k_r, (B, S, cfg.n_heads, m.rope_dim)
+                              ).astype(kn.dtype)], axis=-1)
+    q = jnp.concatenate([qn, qr], axis=-1)[:, :, :, None, :]
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+    out = attn_mod.attend_chunked(q, k, v, scale=scale, causal=True,
+                                  q_chunk=cfg.attn_chunk,
+                                  kv_chunk=cfg.attn_chunk)
+    out = out.reshape(B, S, cfg.n_heads, m.v_dim)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    o = ctx.constrain(o, ("batch", "seq", None))
+    ckv = jnp.concatenate([c_kv, k_r[:, :, 0, :]], axis=-1)
+    if seq_len_cache:
+        ckv = _pad_to(ckv, seq_len_cache)
+    ckv = ctx.constrain(ckv, ("batch", "kv_seq", None))
+    return o, {"ckv": ckv.astype(cfg.pdtype)}
+
+
+def block_prefill(cfg: ModelConfig, bc: BlockCfg, p, h, ctx: ShardCtx,
+                  positions, seq_len: int, max_len: int | None = None):
+    msize = ctx.axis_size("model")
+    x = rmsnorm(h, p["norm1"], cfg.norm_eps)
+    if bc.mixer == "attn":
+        Sc = attn_cache_len(cfg, bc.window, max_len or seq_len, msize)
+        if cfg.mla:
+            y, cache = mla_prefill(cfg, p["attn"], x, ctx, positions=positions,
+                                   seq_len_cache=Sc)
+        else:
+            y, cache = gqa_prefill(cfg, p["attn"], x, ctx, window=bc.window,
+                                   positions=positions, seq_len_cache=Sc)
+    else:
+        mixer = (mamba_mod.mamba2_mixer if cfg.ssm.version == 2
+                 else mamba_mod.mamba1_mixer)
+        y, cache = mixer(cfg, p["mamba"], x, ctx, return_state=True)
+    if cfg.use_post_norm:
+        y = rmsnorm(y, p["post1"], cfg.norm_eps)
+    h = h + y
+    if bc.ffn != "none":
+        x = rmsnorm(h, p["norm2"], cfg.norm_eps)
+        if bc.ffn == "moe":
+            y, _ = moe_mod.moe_block(cfg, p["moe"], x, ctx)
+        else:
+            y = mlp(cfg, p["mlp"], x, ctx)
+        if cfg.use_post_norm:
+            y = rmsnorm(y, p["post2"], cfg.norm_eps)
+        h = h + y
+    return h, cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, ctx: ShardCtx,
+            frontend_embed=None, max_len: int | None = None):
+    """tokens (B,S) → (last-token logits (B,V), cache). The lowered
+    `prefill_32k` dry-run cell. `max_len` sizes the cache for further
+    decoding (engine use); default = S (dry-run cell)."""
+    segments = layer_schedule(cfg)
+    S = tokens.shape[1]
+    h = embed(cfg, params["embed"], tokens, ctx, frontend_embed)
+    positions = jnp.arange(S)
+    new_blocks = []
+    for seg, sp in zip(segments, params["blocks"]):
+
+        def body(hc, slot_params, seg=seg):
+            caches = {}
+            for j, bc in enumerate(seg.pattern):
+                hc, c = block_prefill(cfg, bc, slot_params[f"s{j}"], hc, ctx,
+                                      positions, S, max_len)
+                caches[f"s{j}"] = c
+            return hc, caches
+
+        body = jax.checkpoint(body, prevent_cse=False)
+        h, caches = jax.lax.scan(body, h, sp)
+        new_blocks.append(caches)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    h = ctx.constrain(h, ("batch", None, None))
+    last = h[:, -1, :]
+    w = (params["embed"]["table"].T if cfg.tie_embeddings
+         else params["unembed"]["w"])
+    logits = jnp.einsum("bd,dv->bv", last, w.astype(last.dtype),
+                        preferred_element_type=F32)
+    logits = _softcap(logits, cfg.final_softcap)
+    logits = ctx.constrain(logits, ("batch", "vocab"))
+    return logits, {"blocks": new_blocks}
+
+
+def whisper_prefill(cfg: ModelConfig, params, frames, ctx: ShardCtx):
+    """Encode + build per-decoder-layer cross KV (the whisper prefill cell)."""
+    enc_out = whisper_mod.encode(cfg, params, frames, ctx)
+    enc_out = ctx.constrain(enc_out, ("batch", None, None))
+
+    def body(_, p):
+        k, v = attn_mod.cross_kv(cfg, p["cross"], enc_out, ctx)
+        k = ctx.constrain(k, ("batch", "kv_seq", "kv_heads", None))
+        v = ctx.constrain(v, ("batch", "kv_seq", "kv_heads", None))
+        return _, {"xk": k, "xv": v}
+
+    _, cross = jax.lax.scan(body, None, params["dec_blocks"])
+    B = frames.shape[0]
+    msize = ctx.axis_size("model")
+    Sd = -(-cfg.max_decoder_len // msize) * msize
+    zeros = jnp.zeros((cfg.n_layers, B, Sd, cfg.n_kv_heads, cfg.head_dim),
+                      cfg.pdtype)
+    zeros = ctx.constrain(zeros, (None, "batch", "kv_seq", "kv_heads", None))
+    cache = {"dec_blocks": {"k": zeros, "v": zeros,
+                            "xk": cross["xk"], "xv": cross["xv"]}}
+    return enc_out, cache
+
+
+def prefill_step_fn(cfg: ModelConfig, ctx: ShardCtx):
+    if cfg.enc_dec:
+        def step(params, frames):
+            return whisper_prefill(cfg, params, frames, ctx)
+        return step
+
+    def step(params, tokens, frontend_embed=None):
+        return prefill(cfg, params, tokens, ctx, frontend_embed)
+    return step

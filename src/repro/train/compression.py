@@ -1,0 +1,77 @@
+"""Error-feedback gradient compression (distributed-optimization trick).
+
+Two codecs for the cross-pod / cross-tier gradient exchange, both with
+error-feedback residuals so the compression error is re-injected next step
+(Karimireddy et al. '19 — EF makes biased compressors convergent):
+
+* ``int8``  — per-tensor absmax scaling to int8 (4× over fp32 on the wire);
+* ``topk``  — keep the top-k fraction of entries by magnitude (sparse).
+
+In-graph use: ``compress_decompress`` simulates the wire round-trip inside
+``train_step`` (numerics). Host use: the heterogeneous batch partitioner
+ships actual int8 buffers between tiers (bytes measured in benchmarks).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"          # none | int8 | topk
+    topk_frac: float = 0.01
+
+
+def init_residuals(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, F32), grads)
+
+
+def _int8_roundtrip(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q.astype(F32) * scale
+
+
+def _topk_roundtrip(x, frac):
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+def compress_decompress(grads, residuals, ccfg: CompressionConfig):
+    """→ (decompressed grads as seen post-allreduce, new residuals)."""
+    if ccfg.kind == "none":
+        return grads, residuals
+
+    def one(g, r):
+        x = g.astype(F32) + r
+        if ccfg.kind == "int8":
+            y = _int8_roundtrip(x)
+        elif ccfg.kind == "topk":
+            y = _topk_roundtrip(x, ccfg.topk_frac)
+        else:
+            raise ValueError(ccfg.kind)
+        return y.astype(g.dtype), x - y
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(td, [o[0] for o in out]),
+            jax.tree.unflatten(td, [o[1] for o in out]))
+
+
+def wire_bytes(grads, ccfg: CompressionConfig) -> int:
+    """Bytes on the wire for one exchange (benchmark accounting)."""
+    n = sum(x.size for x in jax.tree.leaves(grads))
+    if ccfg.kind == "int8":
+        return n + 4 * len(jax.tree.leaves(grads))
+    if ccfg.kind == "topk":
+        k = int(n * ccfg.topk_frac)
+        return k * (4 + 4)          # value + index
+    return n * 4

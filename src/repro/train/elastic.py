@@ -1,0 +1,71 @@
+"""Elastic re-meshing: shrink/regrow the data axis when tiers die.
+
+When the StragglerMonitor excludes a tier (or a device failure surfaces as
+an exception), the loop rebuilds the mesh from the surviving devices —
+keeping the ``model`` axis intact (TP degree is a property of the weights'
+layout) and shrinking ``data`` — then reshards the training state through
+host memory. Losing data-parallel replicas changes only throughput, not
+model math, so training resumes bit-exactly from the same state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding.axes import ShardCtx
+
+
+def build_mesh(devices, model_size: int, axis_names=("data", "model")) -> Mesh:
+    n = len(devices)
+    assert n % model_size == 0, (n, model_size)
+    arr = np.array(devices).reshape(n // model_size, model_size)
+    return Mesh(arr, axis_names)
+
+
+def shrink_mesh(ctx: ShardCtx, failed_indices: set[int]) -> ShardCtx:
+    """Drop whole data-rows containing failed devices; rebuild the mesh."""
+    mesh = ctx.mesh
+    devs = np.array(mesh.devices)            # (data, model) [or (pod,d,m)]
+    if devs.ndim == 3:                       # collapse pod into data
+        devs = devs.reshape(-1, devs.shape[-1])
+    keep_rows = [i for i in range(devs.shape[0])
+                 if not any(d.id in failed_indices for d in devs[i])]
+    assert keep_rows, "no healthy data rows left"
+    new = Mesh(devs[keep_rows], ("data", "model"))
+    return ShardCtx(mesh=new, rules=ctx.rules)
+
+
+def reshard_state(state, defs_tree_specs, new_ctx: ShardCtx):
+    """Host round-trip reshard (single-controller CPU path).
+
+    defs_tree_specs: pytree of logical-axes tuples matching `state` leaves
+    (or None to replicate)."""
+
+    def move(leaf, axes):
+        arr = np.asarray(jax.device_get(leaf))
+        if axes is None:
+            return jax.device_put(arr)
+        return jax.device_put(arr, new_ctx.sharding(axes, arr.shape))
+
+    return jax.tree.map(move, state, defs_tree_specs)
+
+
+class FailureInjector:
+    """Deterministic failure schedule for fault-tolerance tests:
+    {step: exception | device_index}."""
+
+    def __init__(self, schedule: dict[int, Exception]):
+        self.schedule = dict(schedule)
+        self.fired: list[int] = []
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.schedule and step not in self.fired:
+            self.fired.append(step)
+            raise self.schedule[step]
+
+
+class DeviceFailure(RuntimeError):
+    def __init__(self, device_index: int):
+        super().__init__(f"simulated failure of device {device_index}")
+        self.device_index = device_index

@@ -1,0 +1,99 @@
+"""Fault-tolerant training loop.
+
+Responsibilities: init-or-restore, periodic (async) checkpoints, per-step
+throughput accounting feeding the StragglerMonitor, failure handling
+(restore newest valid checkpoint, optionally after an elastic re-mesh), and
+a bounded restart budget. This is the loop examples/train_lm.py and the
+fault-tolerance tests drive.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.straggler import StragglerMonitor
+from repro.sharding.axes import ShardCtx
+from repro.train import checkpoint as ckpt
+from repro.train.compression import CompressionConfig
+from repro.train.optimizer import OptConfig
+from repro.train.step import init_state, make_train_step
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    async_ckpt: bool = True
+    max_restarts: int = 3
+    log_every: int = 10
+
+
+@dataclass
+class LoopResult:
+    state: Any
+    history: list[dict] = field(default_factory=list)
+    restarts: int = 0
+    resumed_from: Optional[int] = None
+
+
+def train_loop(cfg: ModelConfig, ocfg: OptConfig, lcfg: LoopConfig,
+               ctx: ShardCtx, data_iter: Iterator[dict],
+               ccfg: CompressionConfig | None = None,
+               failure_injector=None,
+               on_step: Optional[Callable[[int, dict], None]] = None,
+               seed: int = 0) -> LoopResult:
+    step_fn = jax.jit(make_train_step(cfg, ocfg, ctx, ccfg))
+    monitor = StragglerMonitor()
+    result = LoopResult(state=None)
+
+    def init_or_restore():
+        state = init_state(cfg, jax.random.PRNGKey(seed), ctx, ccfg)
+        restored = ckpt.restore(lcfg.ckpt_dir, state, ctx)
+        if restored is not None:
+            state, at = restored
+            result.resumed_from = at
+            return state, at
+        return state, 0
+
+    state, start = init_or_restore()
+    step = start
+    restarts = 0
+    while step < lcfg.total_steps:
+        try:
+            batch = next(data_iter)
+            if failure_injector is not None:
+                failure_injector.maybe_fail(step)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            tokens = float(metrics.get("tokens", 0.0))
+            monitor.observe("self", max(int(tokens), 1), dt)
+            step += 1
+            row = {"step": step, "dt": dt,
+                   **{k: float(v) for k, v in metrics.items()}}
+            result.history.append(row)
+            if on_step:
+                on_step(step, row)
+            if step % lcfg.ckpt_every == 0 or step == lcfg.total_steps:
+                if lcfg.async_ckpt:
+                    ckpt.save_async(lcfg.ckpt_dir, state, step)
+                else:
+                    ckpt.save(lcfg.ckpt_dir, state, step)
+        except StopIteration:
+            break
+        except Exception:
+            restarts += 1
+            result.restarts = restarts
+            if restarts > lcfg.max_restarts:
+                raise
+            ckpt.wait_pending()
+            state, step = init_or_restore()
+    ckpt.wait_pending()
+    result.state = state
+    return result

@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real single CPU device; only
+repro.launch.dryrun (its own process) forces 512 host devices."""
+import jax
+import pytest
+
+from repro.sharding.axes import single_device_ctx
+
+
+@pytest.fixture(scope="session")
+def ctx():
+    return single_device_ctx()
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,56 @@
+"""Per-architecture smoke tests: reduced config, one fwd+bwd step on CPU,
+output shapes + finite loss/grads (assignment requirement f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs, smoke_config
+from repro.models.model import loss_fn, model_defs, synth_batch
+from repro.sharding import params as prm
+
+ARCHS = sorted(all_configs())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_backward(arch, ctx):
+    cfg = smoke_config(all_configs()[arch])
+    defs = model_defs(cfg)
+    params = prm.materialize(defs, jax.random.PRNGKey(0))
+    batch = synth_batch(cfg, 2, 64, jax.random.PRNGKey(1))
+
+    @jax.jit
+    def step(p):
+        return jax.value_and_grad(lambda q: loss_fn(cfg, q, batch, ctx),
+                                  has_aux=True)(p)
+
+    (loss, metrics), grads = step(params)
+    assert np.isfinite(float(loss)), arch
+    # random init ⇒ loss ≈ ln(vocab)
+    assert abs(float(metrics["ce"]) - np.log(cfg.vocab)) < 1.0, arch
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gn)) and float(gn) > 0, arch
+    # grads cover every parameter leaf
+    assert len(jax.tree.leaves(grads)) == len(jax.tree.leaves(params))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_logits_shape(arch, ctx):
+    cfg = smoke_config(all_configs()[arch])
+    params = prm.materialize(model_defs(cfg), jax.random.PRNGKey(0))
+    if cfg.enc_dec:
+        from repro.models.whisper import decode_hidden, encode
+        frames = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+        enc = encode(cfg, params, frames, ctx)
+        assert enc.shape == (2, 32, cfg.d_model)
+        toks = jnp.zeros((2, 8), jnp.int32)
+        h = decode_hidden(cfg, params, toks, enc, ctx)
+        assert h.shape == (2, 8, cfg.d_model)
+    else:
+        from repro.models.transformer import lm_hidden
+        batch = synth_batch(cfg, 2, 32, jax.random.PRNGKey(1))
+        h, _ = lm_hidden(cfg, params, batch["tokens"], ctx,
+                         batch.get("frontend_embed"))
+        assert h.shape == (2, 32, cfg.d_model)
+        assert not bool(jnp.any(jnp.isnan(h.astype(jnp.float32))))

@@ -1,0 +1,100 @@
+"""Assigned-architecture configs must match the published numbers exactly
+(deliverable f), and the cache/roofline accounting must be consistent."""
+import pytest
+
+from repro.configs import SHAPES, all_configs, cell_supported, get_config
+
+EXPECT = {
+    # arch: (L, d_model, H, kv, d_ff, vocab)
+    "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102_400),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32_064),
+    "gemma2-2b": (26, 2304, 8, 4, 9216, 256_000),
+    "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32_000),
+    "nemotron-4-15b": (32, 6144, 48, 8, 24_576, 256_000),
+    "mistral-nemo-12b": (40, 5120, 32, 8, 14_336, 131_072),
+    "mamba2-130m": (24, 768, 0, 0, 0, 50_280),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14_336, 65_536),
+    "internvl2-26b": (48, 6144, 48, 8, 16_384, 92_553),
+    "whisper-large-v3": (32, 1280, 20, 20, 5120, 51_866),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECT))
+def test_exact_assignment_numbers(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, ff, V = EXPECT[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff or (cfg.moe and cfg.moe.d_expert == ff)
+    assert cfg.vocab == V
+
+
+def test_moe_specs():
+    ds = get_config("deepseek-v2-236b")
+    assert ds.moe.n_experts == 160 and ds.moe.top_k == 6
+    assert ds.moe.n_shared == 2 and ds.mla.kv_lora == 512
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert phi.moe.n_experts == 16 and phi.moe.top_k == 2
+    jb = get_config("jamba-v0.1-52b")
+    assert jb.moe.n_experts == 16 and jb.moe.top_k == 2
+    assert jb.ssm.attn_period == 8          # 1:7 attn:mamba
+
+
+def test_param_counts_near_published():
+    """6 archs with verifiable totals: within 12 % of the nameplate."""
+    from benchmarks.roofline import n_params
+    expect = {"deepseek-v2-236b": 236e9, "phi3.5-moe-42b-a6.6b": 42e9,
+              "gemma2-2b": 2.6e9, "mistral-nemo-12b": 12e9,
+              "mamba2-130m": 0.13e9, "jamba-v0.1-52b": 52e9}
+    for arch, n in expect.items():
+        total, active = n_params(get_config(arch))
+        assert abs(total - n) / n < 0.12, (arch, total)
+        assert active <= total
+
+
+def test_active_params_moe():
+    from benchmarks.roofline import n_params
+    total, active = n_params(get_config("phi3.5-moe-42b-a6.6b"))
+    assert 5e9 < active < 9e9               # nameplate A6.6B
+
+
+def test_layer_schedule_patterns():
+    from repro.models.transformer import layer_schedule
+    g = layer_schedule(get_config("gemma2-2b"))
+    assert len(g) == 1 and len(g[0].pattern) == 2 and g[0].repeat == 13
+    assert g[0].pattern[0].window == 4096 and g[0].pattern[1].window == 0
+    j = layer_schedule(get_config("jamba-v0.1-52b"))
+    assert len(j) == 1 and len(j[0].pattern) == 8 and j[0].repeat == 4
+    mixers = [b.mixer for b in j[0].pattern]
+    assert mixers.count("attn") == 1 and mixers[4] == "attn"
+    ffns = [b.ffn for b in j[0].pattern]
+    assert ffns.count("moe") == 4
+    ds = layer_schedule(get_config("deepseek-v2-236b"))
+    assert ds[0].pattern[0].ffn == "dense" and ds[0].repeat == 1
+    assert ds[1].repeat == 59 and ds[1].pattern[0].ffn == "moe"
+
+
+def test_long_500k_rule():
+    runnable = [a for a in sorted(all_configs())
+                if cell_supported(get_config(a), SHAPES["long_500k"])[0]]
+    assert runnable == ["h2o-danube-1.8b", "jamba-v0.1-52b", "mamba2-130m"]
+
+
+def test_swa_cache_is_window_bounded():
+    from repro.serve.kv_cache import cache_bytes
+    cfg = get_config("h2o-danube-1.8b")
+    b_500k = cache_bytes(cfg, 1, 524_288, 16)
+    b_32k = cache_bytes(cfg, 1, 32_768, 16)
+    assert b_500k == b_32k                   # ring buffer = window size
+
+
+def test_mla_cache_compression():
+    """MLA latent cache must be ~an order smaller than GQA-equivalent."""
+    from repro.serve.kv_cache import cache_bytes
+    ds = get_config("deepseek-v2-236b")
+    mn = get_config("mistral-nemo-12b")
+    per_tok_ds = cache_bytes(ds, 1, 32_768, 16) / (60 * 32_768)
+    per_tok_mn = cache_bytes(mn, 1, 32_768, 16) / (40 * 32_768)
+    assert per_tok_ds < per_tok_mn

@@ -1,0 +1,126 @@
+"""HBB scheduler tests: the §3.2 law (hypothesis property tests), the
+two-stage pipeline engine, f convergence, and the paper's headline claim
+(heterogeneous beats offload-only)."""
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunking import accelerator_chunk, cpu_chunk, proportional_split
+from repro.core.hbb import Body, Dynamic, Params
+from repro.core.straggler import StragglerMonitor
+
+
+# ------------------------------------------------------------- chunk law
+@settings(max_examples=200, deadline=None)
+@given(S_f=st.integers(1, 4096), f=st.floats(0.01, 1000.0),
+       r=st.integers(0, 10**6), n=st.integers(1, 64))
+def test_cpu_chunk_bounds(S_f, f, r, n):
+    c = cpu_chunk(S_f, f, r, n)
+    assert 0 <= c <= r
+    if r > 0:
+        assert c >= 1                       # progress guaranteed
+        assert c <= max(1, int(min(S_f / f, r / (f + n))) )
+
+
+@settings(max_examples=100, deadline=None)
+@given(S_f=st.integers(1, 1024), f=st.floats(0.1, 100.0),
+       n=st.integers(1, 16), r1=st.integers(1, 10**5), r2=st.integers(1, 10**5))
+def test_cpu_chunk_monotone_in_remaining(S_f, f, n, r1, r2):
+    lo, hi = sorted((r1, r2))
+    assert cpu_chunk(S_f, f, lo, n) <= cpu_chunk(S_f, f, hi, n)
+
+
+@settings(max_examples=100, deadline=None)
+@given(S_f=st.integers(1, 4096), r=st.integers(0, 10**6))
+def test_accelerator_chunk(S_f, r):
+    c = accelerator_chunk(S_f, r)
+    assert 0 <= c <= r and c <= S_f
+    if r >= S_f:
+        assert c == S_f                     # OpenMP-dynamic fixed chunk
+
+
+@settings(max_examples=100, deadline=None)
+@given(total=st.integers(1, 512).map(lambda x: x * 4),
+       speeds=st.lists(st.floats(0.1, 50.0), min_size=1, max_size=8))
+def test_proportional_split_conserves(total, speeds):
+    parts = proportional_split(total, speeds, quantum=4)
+    assert sum(parts) == total
+    assert all(p % 4 == 0 and p >= 0 for p in parts)
+
+
+def test_guided_tail():
+    """Near the end, the guided operand takes over and drains the tail."""
+    assert cpu_chunk(1024, 8.0, 10, 2) == 1
+    r, drained = 1000, 0
+    while r > 0 and drained < 10_000:
+        c = cpu_chunk(64, 4.0, r, 2)
+        r -= c
+        drained += 1
+    assert r == 0
+
+
+# -------------------------------------------------------------- pipeline
+class SimBody(Body):
+    """Accelerator 8× faster than a core."""
+    def operatorCPU(self, b, e):
+        time.sleep((e - b) * 2e-4)
+
+    def operatorFPGA(self, b, e):
+        time.sleep((e - b) * 2.5e-5)
+
+
+def _run(ncc, nfc, n=8000, chunk=512):
+    p = Params(num_cpu_tokens=ncc, num_fpga_tokens=nfc, fpga_chunk=chunk,
+               f0=4.0)
+    return Dynamic(p).parallel_for(0, n, SimBody())
+
+
+def test_parallel_for_exact_coverage():
+    rep = _run(2, 1)
+    covered = sorted((r.begin, r.end) for r in rep.records)
+    pos = 0
+    for b, e in covered:
+        assert b == pos and e > b
+        pos = e
+    assert pos == 8000
+
+
+def test_f_converges_to_true_ratio():
+    rep = _run(2, 1, n=20000)
+    assert 5.0 < rep.f_final < 12.0         # true ratio 8
+
+
+def test_heterogeneous_beats_offload_only():
+    """Paper §6: CC+FC reduces execution time vs accelerator-only."""
+    t_fpga = min(_run(0, 1).wall_time for _ in range(2))
+    t_het = min(_run(2, 1).wall_time for _ in range(2))
+    assert t_het < t_fpga * 0.95
+
+
+def test_static_vs_dynamic():
+    p = Params(num_cpu_tokens=2, num_fpga_tokens=1, fpga_chunk=512,
+               scheduler="static")
+    rep = Dynamic(p).parallel_for(0, 8000, SimBody())
+    assert sum(r.end - r.begin for r in rep.records) == 8000
+
+
+# -------------------------------------------------------------- straggler
+def test_straggler_detection_and_exclusion():
+    mon = StragglerMonitor(beta=0.5, patience=2)
+    for step in range(6):
+        mon.observe("t0", 100, 0.1)
+        mon.observe("t1", 100, 0.1)
+        mon.observe("t2", 100, 1.0 if step >= 2 else 0.1)  # degrades
+    assert "t2" in mon.excluded()
+    speeds = mon.relative_speeds()
+    assert "t2" not in speeds and set(speeds) == {"t0", "t1"}
+
+
+def test_straggler_recovers_flags():
+    mon = StragglerMonitor(beta=0.5, patience=5)
+    mon.observe("a", 100, 0.1)
+    mon.observe("b", 100, 1.0)      # slow once
+    mon.observe("b", 100, 0.01)     # recovers (EWMA pulls back fast)
+    mon.observe("b", 100, 0.01)
+    assert mon.excluded() == []

@@ -1,0 +1,94 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret mode vs the
+pure-jnp oracle (assignment requirement c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.gemm.gemm import gemm, vmem_bytes
+from repro.kernels.gemm.ref import gemm_ref
+from repro.kernels.grouped_gemm.grouped_gemm import grouped_gemm
+from repro.kernels.grouped_gemm.ref import grouped_gemm_ref
+from repro.kernels.ssd.ref import ssd_intra_chunk_ref
+from repro.kernels.ssd.ssd import ssd_intra_chunk
+
+
+@pytest.mark.parametrize("M,N,K", [(128, 128, 128), (256, 512, 384),
+                                   (64, 256, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_sweep(M, N, K, dtype, key):
+    a = jax.random.normal(key, (M, K), jnp.float32).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N),
+                          jnp.float32).astype(dtype)
+    out = gemm(a, b, bm=64, bn=64, bk=128, interpret=True)
+    ref = gemm_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(ref, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 64), (128, 64, 128)])
+def test_gemm_block_shapes(bm, bn, bk, key):
+    a = jax.random.normal(key, (256, 256), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
+    out = gemm(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.array(out), np.array(gemm_ref(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_vmem_model():
+    # paper Table 2 analogue: the capacity knob must fit VMEM
+    assert vmem_bytes(256, 256, 512) < 16 * 2**20
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 64, 0.0), (False, 0, 0.0), (True, 0, 30.0),
+    (True, 32, 50.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(causal, window, softcap, dtype, key):
+    B, H, T, dh, dv = 2, 3, 128, 32, 16
+    q = jax.random.normal(key, (B, H, T, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, T, dh),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, T, dv),
+                          jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, scale=0.18, causal=causal, window=window,
+                          softcap=softcap, bq=32, bk=32, interpret=True)
+    ref = flash_attention_ref(q, k, v, scale=0.18, causal=causal,
+                              window=window, softcap=softcap)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(ref, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("E,M,K,N", [(4, 64, 128, 64), (8, 128, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_gemm_sweep(E, M, K, N, dtype, key):
+    a = jax.random.normal(key, (E, M, K), jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (E, K, N),
+                          jnp.float32).astype(dtype)
+    out = grouped_gemm(a, w, bm=32, bn=32, bk=64, interpret=True)
+    ref = grouped_gemm_ref(a, w)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(ref, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("Q,P,N", [(32, 16, 32), (64, 64, 128)])
+def test_ssd_kernel_sweep(Q, P, N, key):
+    G = 4
+    x = jax.random.normal(key, (G, Q, P), jnp.float32)
+    cs = jnp.cumsum(
+        -jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (G, Q, 1))),
+        axis=1)
+    B = jax.random.normal(jax.random.PRNGKey(2), (G, Q, N), jnp.float32)
+    C = jax.random.normal(jax.random.PRNGKey(3), (G, Q, N), jnp.float32)
+    y, st = ssd_intra_chunk(x, cs, B, C, interpret=True)
+    yr, str_ = ssd_intra_chunk_ref(x, cs, B, C)
+    np.testing.assert_allclose(np.array(y), np.array(yr), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.array(st), np.array(str_), rtol=1e-5,
+                               atol=1e-5)

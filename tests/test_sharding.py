@@ -1,0 +1,147 @@
+"""Sharding rules + partitioner + elastic + data pipeline unit tests.
+Multi-device behaviours (8 host devices) run in subprocesses because
+XLA_FLAGS must be set before jax initialises."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.data.synthetic import SyntheticLM
+from repro.sharding.axes import DEFAULT_RULES, logical_to_spec
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_divisibility_drops_axis():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # kv_heads=8 does not divide model=16 → replicated
+    spec = logical_to_spec(("batch", None, "kv_heads", None),
+                           (256, 128, 8, 64), mesh)
+    assert spec == P(None, None, None, None) or spec[2] is None
+    spec = logical_to_spec(("vocab", "embed"), (102400, 5120), mesh)
+    assert spec == P("model", "data")
+
+
+def test_batch_uses_pod_and_data():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = logical_to_spec(("batch", "seq"), (256, 4096), mesh)
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_axis_used_once():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # kv_seq takes model first; kv_heads can't reuse it
+    spec = logical_to_spec(("batch", "kv_seq", "kv_heads", None),
+                           (128, 32768, 16, 128), mesh)
+    assert spec[1] == "model" and spec[2] is None
+
+
+@settings(max_examples=50, deadline=None)
+@given(dim=st.integers(1, 4096))
+def test_spec_always_divides(dim):
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = logical_to_spec(("mlp",), (dim,), mesh)
+    if spec[0] is not None:
+        assert dim % 16 == 0
+
+
+def test_synthetic_data_structure():
+    d = SyntheticLM(vocab=97, seq_len=64, seed=1, copy_period=8)
+    b = d.batch(4)
+    assert b["tokens"].shape == (4, 64)
+    # copy structure: every 8th target is predictable
+    toks = np.concatenate([b["tokens"], b["targets"][:, -1:]], axis=1)
+    for off in range(8, 65, 8):
+        np.testing.assert_array_equal(toks[:, off], toks[:, off - 8])
+    # determinism
+    d2 = SyntheticLM(vocab=97, seq_len=64, seed=1, copy_period=8)
+    np.testing.assert_array_equal(d2.batch(4)["tokens"], b["tokens"])
+
+
+MULTIDEV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.partitioner import HeterogeneousBatchPartitioner, Tier
+    from repro.train.elastic import build_mesh, shrink_mesh
+    from repro.sharding.axes import ShardCtx
+
+    devs = jax.devices()
+    assert len(devs) == 8
+
+    # --- heterogeneous batch partitioner: 2 tiers, one slowed 3x
+    def grad_fn(params, batch):
+        g = jax.tree.map(lambda p: jnp.full_like(p, jnp.mean(batch["x"])), params)
+        return g, {}
+    params = {"w": jnp.zeros((4,))}
+    tiers = [Tier("fast", devs[:6], grad_fn, slowdown=1.0),
+             Tier("slow", devs[6:], grad_fn, slowdown=3.0)]
+    part = HeterogeneousBatchPartitioner(tiers, quantum=2)
+    batch = {"x": np.arange(24, dtype=np.float32)}
+    for step in range(6):
+        g, info = part.step(params, batch)
+    # after warmup the fast tier gets more samples
+    assert info["parts"][0] > info["parts"][1], info
+    # weighted combine == global mean regardless of split
+    assert abs(float(g["w"][0]) - float(np.mean(batch["x"]))) < 1e-5
+
+    # --- elastic re-mesh drops the failed data row
+    mesh = build_mesh(devs, model_size=2)        # (4 data, 2 model)
+    ctx = ShardCtx(mesh=mesh)
+    ctx2 = shrink_mesh(ctx, failed_indices={devs[2].id})
+    assert ctx2.mesh.shape["data"] == 3
+    assert ctx2.mesh.shape["model"] == 2
+    print("MULTIDEV-OK")
+""")
+
+
+def test_multidevice_partitioner_and_elastic():
+    r = subprocess.run([sys.executable, "-c", MULTIDEV],
+                       env=dict(os.environ, PYTHONPATH="src"),
+                       capture_output=True, text=True, timeout=300,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "MULTIDEV-OK" in r.stdout, r.stdout + r.stderr
+
+
+SHARDED_TRAIN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import all_configs, smoke_config
+    from repro.sharding.axes import ShardCtx
+    from repro.train.step import init_state, make_train_step
+    from repro.train.optimizer import OptConfig
+    from repro.models.model import synth_batch
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    ctx = ShardCtx(mesh=mesh)
+    cfg = smoke_config(all_configs()["phi3.5-moe-42b-a6.6b"])
+    ocfg = OptConfig(lr=1e-3)
+    state = init_state(cfg, jax.random.PRNGKey(0), ctx, ocfg=ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg, ctx, microbatches=2))
+    batch = synth_batch(cfg, 8, 64, jax.random.PRNGKey(1))
+    with mesh:
+        state, m = step(state, batch)
+        state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"])), m
+    print("SHARDED-OK", float(m["loss"]))
+""")
+
+
+def test_sharded_train_step_8dev():
+    """Real sharded execution (2×2×2 mesh) of an MoE smoke config — the
+    shard_map MoE + CP attention actually run distributed, not just lower."""
+    r = subprocess.run([sys.executable, "-c", SHARDED_TRAIN],
+                       env=dict(os.environ, PYTHONPATH="src"),
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "SHARDED-OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
