@@ -1,0 +1,125 @@
+"""Serving fast-path benchmark: fused quantum decode + bucketed batched
+prefill + cache donation vs. the reference per-token engine.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve
+
+Measures, on the SAME workload (mixed prompt lengths so the legacy path
+recompiles per length):
+  * tokens/sec end-to-end (compiles included — recompile overhead is the
+    point) for fast and legacy engines, and their ratio;
+  * prefill compile count (jit cache probe): fast = one per length bucket,
+    legacy = one per distinct prompt length;
+  * per-cycle scheduler balance: mean admitted prompts vs. decoded tokens
+    per engine cycle and the final HBB `f` ratio.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _workload(cfg, n_requests: int, max_new: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    # many distinct lengths across two power-of-2 buckets (≤16, ≤32)
+    lens = [int(x) for x in rng.integers(4, 31, n_requests)]
+    return [(i, rng.integers(0, cfg.vocab, n).tolist()) for i, n in
+            enumerate(lens)]
+
+
+def serve_once(fast: bool, *, arch: str = "h2o-danube-1.8b",
+               n_requests: int = 12, max_new: int = 16,
+               decode_quantum: int = 8, seed: int = 0) -> dict:
+    from repro.configs import get_config, smoke_config
+    from repro.serve.engine import Request, make_engine
+    from repro.sharding.axes import single_device_ctx
+
+    cfg = smoke_config(get_config(arch))
+    ctx = single_device_ctx()
+    eng = make_engine(cfg, ctx, max_slots=4, max_len=64, fast=fast,
+                      decode_quantum=decode_quantum)
+    reqs = [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in _workload(cfg, n_requests, max_new, seed)]
+    t0 = time.perf_counter()
+    eng.run(reqs)
+    dt = time.perf_counter() - t0
+    tok = sum(len(r.out) for r in reqs)
+    cycles = eng.cycle_log or [{"admitted": 0, "decoded": 0, "f": 0.0}]
+    return {
+        "mode": "fast" if fast else "legacy",
+        "tok": tok,
+        "dt": dt,
+        "tok_s": tok / dt,
+        "prefill_compiles": eng.prefill_compiles(),
+        "distinct_prompt_lens": len({len(r.prompt) for r in reqs}),
+        "f": eng.tracker.f(),
+        "mean_admitted_per_cycle": float(np.mean([c["admitted"]
+                                                  for c in cycles])),
+        "mean_decoded_per_cycle": float(np.mean([c["decoded"]
+                                                 for c in cycles])),
+        "cycles": len(cycles),
+        "all_done": all(r.done for r in reqs),
+    }
+
+
+def rows(**kw) -> list[dict]:
+    fast = serve_once(True, **kw)
+    legacy = serve_once(False, **kw)
+    fast["speedup_vs_legacy"] = fast["tok_s"] / max(legacy["tok_s"], 1e-9)
+    legacy["speedup_vs_legacy"] = 1.0
+    return [fast, legacy]
+
+
+def csv_rows(out: list[dict]) -> list[str]:
+    """Harness-contract ``name,us_per_call,derived`` rows (shared with
+    benchmarks/run.py so the two emitters can't drift)."""
+    lines = []
+    for r in out:
+        us = r["dt"] / max(r["tok"], 1) * 1e6
+        lines.append(f"serve/{r['mode']}/tok_s,{us:.0f},{r['tok_s']:.1f}")
+        lines.append(f"serve/{r['mode']}/prefill_compiles,{us:.0f},"
+                     f"{r['prefill_compiles']}")
+    lines.append(f"serve/speedup_fast_over_legacy,0,"
+                 f"{out[0]['speedup_vs_legacy']:.2f}")
+    return lines
+
+
+def write_bench_json(out: list[dict],
+                     path: str | Path = "BENCH_1.json") -> None:
+    """The per-PR perf artifact — one writer, shared by main(), run.py, CI."""
+    fast, legacy = out
+    Path(path).write_text(json.dumps({
+        "bench": "serve_fast_path",
+        "arch": "h2o-danube-1.8b (smoke)",
+        "serve_tok_s": fast["tok_s"],
+        "serve_tok_s_legacy": legacy["tok_s"],
+        "speedup_fast_over_legacy": fast["speedup_vs_legacy"],
+        "prefill_compiles_fast": fast["prefill_compiles"],
+        "prefill_compiles_legacy": legacy["prefill_compiles"],
+        "distinct_prompt_lens": fast["distinct_prompt_lens"],
+        "f_ratio": fast["f"],
+    }, indent=2) + "\n")
+
+
+def main() -> None:
+    out = rows()
+    fast, legacy = out
+    print("name,us_per_call,derived")
+    for line in csv_rows(out):
+        print(line)
+    write_bench_json(out)
+    print(f"# fast: {fast['tok']} tok in {fast['dt']:.2f}s "
+          f"({fast['tok_s']:.1f} tok/s), {fast['prefill_compiles']} prefill "
+          f"compiles for {fast['distinct_prompt_lens']} distinct lengths, "
+          f"f={fast['f']:.2f}, balance {fast['mean_admitted_per_cycle']:.2f} "
+          f"admits / {fast['mean_decoded_per_cycle']:.1f} decodes per cycle")
+    print(f"# legacy: {legacy['tok']} tok in {legacy['dt']:.2f}s "
+          f"({legacy['tok_s']:.1f} tok/s), {legacy['prefill_compiles']} "
+          f"prefill compiles")
+    assert fast["all_done"] and legacy["all_done"]
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract, plus
 validates the paper's claims (§6: 25–50 % heterogeneous time reduction,
-energy neutrality; §5: ~8× platform gap at 16 M elements).
+energy neutrality; §5: ~8× platform gap at 16 M elements). Also writes
+``BENCH_1.json`` (serving tokens/sec + speedup) so the perf trajectory
+accumulates across PRs.
 """
 from __future__ import annotations
 
@@ -62,6 +64,17 @@ def main() -> None:
     for r in srows:
         print(f"scaling/{r['size']}/ultra_over_zynq,{us:.0f},"
               f"{r['ultra_over_zynq']:.2f}")
+
+    # --- Serving fast path (tokens/sec baseline, PR 1) --------------------
+    try:
+        from benchmarks.bench_serve import (csv_rows, rows as serve_rows,
+                                            write_bench_json)
+        srows = serve_rows()
+        for line in csv_rows(srows):
+            print(line)
+        write_bench_json(srows)
+    except Exception as e:  # serving bench must not sink the driver
+        print(f"serve/unavailable,0,0  # {e}")
 
     # --- Roofline summary (from dry-run artifacts, if present) ------------
     try:

@@ -1,7 +1,9 @@
 """Batched serving example (deliverable b): continuous batching with
-slot-refill prefills, HBB admission control, per-request streams.
+bucketed batched prefill, fused quantum decode, HBB admission control,
+per-request streams.
 
     PYTHONPATH=src python examples/serve_batch.py --arch h2o-danube-1.8b
+    PYTHONPATH=src python examples/serve_batch.py --legacy   # per-token path
 """
 import argparse
 import time
@@ -18,11 +20,16 @@ def main():
     ap.add_argument("--arch", default="h2o-danube-1.8b")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--decode-quantum", type=int, default=8)
+    ap.add_argument("--legacy", action="store_true",
+                    help="reference per-token engine (no buckets/quantum)")
     args = ap.parse_args()
 
     cfg = smoke_config(get_config(args.arch))
     ctx = single_device_ctx()
-    eng = make_engine(cfg, ctx, max_slots=4, max_len=96)
+    eng = make_engine(cfg, ctx, max_slots=4, max_len=96,
+                      fast=not args.legacy,
+                      decode_quantum=args.decode_quantum)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,
@@ -35,7 +42,9 @@ def main():
     tok = sum(len(r.out) for r in reqs)
     print(f"{len(reqs)} requests / {tok} tokens in {dt:.2f}s "
           f"({tok/dt:.1f} tok/s incl. compile); admission f = "
-          f"{eng.tracker.f():.2f}")
+          f"{eng.tracker.f():.2f}; prefill compiles = "
+          f"{eng.prefill_compiles()} for "
+          f"{len({len(r.prompt) for r in reqs})} distinct prompt lengths")
     for r in reqs:
         print(f"  req {r.rid:2d} prompt[{len(r.prompt):2d}] → {r.out}")
 

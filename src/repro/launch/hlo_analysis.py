@@ -127,9 +127,15 @@ def _dot_flops(line: str, symbols: dict[str, list[int]]) -> float:
     ops = re.search(r"dot\(([^)]*)\)", line)
     csize = 1
     if cm and ops:
-        lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
-        lhs_dims = symbols.get(lhs_name)
-        if lhs_dims is not None:
+        opstr = ops.group(1).strip()
+        sm = re.match(r"(\w+)\[([\d,]*)\]", opstr)
+        if sm and sm.group(1) in _DTYPE_BYTES:
+            # newer XLA inlines operand types: dot(f32[8,64]{1,0} %copy, …)
+            lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+        else:
+            lhs_name = opstr.split(",")[0].strip().lstrip("%")
+            lhs_dims = symbols.get(lhs_name)
+        if lhs_dims:
             for i in (int(x) for x in cm.group(1).split(",") if x):
                 if i < len(lhs_dims):
                     csize *= lhs_dims[i]
@@ -178,9 +184,15 @@ def analyze_hlo(txt: str, n_devices: int) -> dict:
             if wm:
                 bodyc = wm.group(1) or wm.group(4)
                 condc = wm.group(2) or wm.group(3)
-                consts = dict((n, int(v)) for n, v in
-                              _CONST_RE.findall(comps.get(condc, "")))
-                tc = _trip_count(comps.get(condc, ""), consts) or 1
+                # newer XLA annotates the loop directly — prefer that over
+                # reverse-engineering the condition computation
+                km = re.search(r'known_trip_count[^0-9]*(\d+)', line)
+                if km:
+                    tc = int(km.group(1))
+                else:
+                    consts = dict((n, int(v)) for n, v in
+                                  _CONST_RE.findall(comps.get(condc, "")))
+                    tc = _trip_count(comps.get(condc, ""), consts) or 1
                 info.children.append((bodyc, tc))
                 info.children.append((condc, tc))
             else:

@@ -451,8 +451,8 @@ def cp_gqa_attention(cfg: ModelConfig, p, x, ctx: ShardCtx, *, window: int,
             cos, sin = rope_tables(pos_loc, cfg.head_dim, cfg.rope_theta)
             q = apply_rope(q, cos[None], sin[None])
             k = apply_rope(k, cos[None], sin[None])
-        msize = jax.lax.axis_size("model")
-        n_nb = -(-window // S_loc) if window else msize
+        msize = ctx.axis_size("model")     # static mesh size (jax<0.5 has
+        n_nb = -(-window // S_loc) if window else msize  # no lax.axis_size)
         if window and n_nb < msize - 1:
             # window-aware neighbor exchange: shard i only needs kv from
             # [i·S_loc − window, (i+1)·S_loc) → its own rows + n_nb left

@@ -70,10 +70,11 @@ def flash_decode_gqa(q, k_new, v_new, ck, cv, pos, *, window: int,
     cspec = ctx.spec(("batch", "kv_seq", "kv_heads", None), ck.shape)
     pspec = P(bp)
 
+    msize = ctx.axis_size("model")         # static (jax<0.5: no lax.axis_size)
+
     def local(q, kn, vn, ck, cv, pos):
         i = jax.lax.axis_index("model")
         B, S_loc = ck.shape[0], ck.shape[1]
-        msize = jax.lax.axis_size("model")
         S_tot = S_loc * msize
         if update:
             wpos = pos % S_tot if window else pos       # ring for windows
@@ -253,6 +254,59 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, ctx: ShardCtx):
     logits = _softcap(logits, cfg.final_softcap)
     logits = ctx.constrain(logits, ("batch", "vocab"))
     return logits, {"blocks": new_blocks}
+
+
+# ------------------------------------------------------ fused decode loop
+def decode_loop(cfg: ModelConfig, params, cache, tokens, pos, active,
+                remaining, ctx: ShardCtx, *, num_steps: int, eos_id: int,
+                max_len: int):
+    """Multi-token greedy decode fused into one device program.
+
+    Wraps `decode_step` in a `jax.lax.scan` over a quantum of `num_steps`
+    tokens with argmax *on device* and per-slot done masking, so the host
+    syncs once per quantum instead of once per token (DESIGN.md §"Serving
+    fast path"). All carries are (B,) device arrays the engine keeps
+    resident between cycles; the engine jits this with the cache and state
+    donated so decoding stops allocating a fresh cache every token.
+
+    Masking: a slot emits while `active`; it deactivates when its token
+    budget (`remaining`) drains, it samples `eos_id`, or its write position
+    reaches `max_len - 1`. Inactive slots still run (batched decode is a
+    fixed quantum) but their emissions are masked and their state frozen;
+    whatever they scribble into their cache rows is overwritten by the next
+    prefill insert into that slot.
+
+    Returns ((cache, tokens, pos, active, remaining),
+             emitted (num_steps, B) int32, emitted_mask (num_steps, B) bool).
+    """
+
+    def body(carry, _):
+        cache, tokens, pos, active, remaining = carry
+        logits, cache = decode_step(cfg, params, cache, tokens, pos, ctx)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        emit_tok = jnp.where(active, nxt, -1)
+        remaining = remaining - active.astype(remaining.dtype)
+        pos = pos + active.astype(pos.dtype)
+        still = active & (remaining > 0) & (nxt != eos_id) & \
+            (pos < max_len - 1)
+        tokens = jnp.where(still, nxt, tokens)
+        return (cache, tokens, pos, still, remaining), (emit_tok, active)
+
+    carry = (cache, tokens, pos, active, remaining)
+    carry, (toks, msks) = jax.lax.scan(body, carry, None, length=num_steps)
+    return carry, toks, msks
+
+
+def decode_loop_fn(cfg: ModelConfig, ctx: ShardCtx, *, num_steps: int,
+                   eos_id: int, max_len: int):
+    """Engine-facing closure, shaped for jit(donate_argnums=(1,2,3,4,5))."""
+
+    def loop(params, cache, tokens, pos, active, remaining):
+        return decode_loop(cfg, params, cache, tokens, pos, active,
+                           remaining, ctx, num_steps=num_steps,
+                           eos_id=eos_id, max_len=max_len)
+
+    return loop
 
 
 # ---------------------------------------------------- whisper decode step

@@ -3,10 +3,25 @@
 Slot-based: a fixed decode batch of `max_slots` sequences; finished slots
 are refilled by prefilling pending requests and inserting their caches at
 the slot index. Admission control follows the paper's scheduling law: the
-number of prefills admitted per cycle is an HBB chunk — the accelerator
-class is the decode batch (fixed quantum), prefill admission is the
-adaptive `S_c` side, driven by the measured prefill:decode throughput ratio
-`f` (so a long prompt backlog can't starve decode, and vice versa).
+accelerator class is the fused decode quantum (fixed `S_f`), prefill
+admission is the adaptive `S_c` side, driven by the measured
+prefill:decode *token* throughput ratio `f` (so a long prompt backlog
+can't starve decode, and vice versa).
+
+Fast path (default; DESIGN.md §"Serving fast path"):
+  * decode runs `decode_quantum` tokens per dispatch via a jitted
+    `lax.scan` with on-device argmax and per-slot done masking — one host
+    sync per quantum instead of one per token;
+  * the KV cache and (tokens, pos, active, remaining) state vectors stay
+    resident on device and are *donated* through the decode loop, so a
+    decode step updates the cache in place instead of allocating a new one;
+  * prompts are padded to power-of-2 length buckets and prefilled batched
+    (fixed batch `prefill_batch`), then inserted with a single gather-based
+    scatter — one XLA compile per bucket, one dispatch per admitted group.
+
+`fast=False` keeps the original per-token / per-prompt reference path; the
+benchmark (benchmarks/bench_serve.py) and the equivalence tests in
+tests/test_serve.py run both.
 """
 from __future__ import annotations
 
@@ -22,9 +37,10 @@ from repro.configs.base import ModelConfig
 from repro.core.chunking import cpu_chunk
 from repro.core.tracker import ThroughputTracker
 from repro.models.model import model_defs
-from repro.serve.decode import decode_step
+from repro.models.transformer import layer_schedule
+from repro.serve.decode import decode_loop_fn, decode_step
 from repro.serve.kv_cache import cache_defs
-from repro.serve.prefill import prefill
+from repro.serve.prefill import bucket_len, prefill
 from repro.sharding import params as prm
 from repro.sharding.axes import ShardCtx
 
@@ -38,25 +54,59 @@ class Request:
     done: bool = False
 
 
+def _jit_cache_size(fn) -> int:
+    """Compile-count probe: distinct traced signatures of a jitted fn."""
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return -1
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ctx: ShardCtx, *,
-                 max_slots: int = 4, max_len: int = 128, eos_id: int = -1):
+                 max_slots: int = 4, max_len: int = 128, eos_id: int = -1,
+                 decode_quantum: int = 8, prefill_batch: int | None = None,
+                 min_bucket: int = 16, fast: bool = True):
         assert not cfg.enc_dec, "enc-dec serving uses whisper_decode_step"
         self.cfg, self.params, self.ctx = cfg, params, ctx
         self.max_slots, self.max_len, self.eos_id = max_slots, max_len, eos_id
+        self.fast = fast
+        self.decode_quantum = max(1, decode_quantum)
+        self.prefill_batch = prefill_batch or max_slots
+        self.min_bucket = min_bucket
+        # padded buckets are only sound when every mixer is attention —
+        # a mamba state scan would absorb the pad tokens (DESIGN.md)
+        self.pad_safe = all(bc.mixer == "attn"
+                            for seg in layer_schedule(cfg)
+                            for bc in seg.pattern)
         msize = ctx.axis_size("model")
         self.cache = prm.materialize(
             cache_defs(cfg, max_slots, max_len, msize), jax.random.PRNGKey(0))
-        self.pos = np.zeros(max_slots, np.int32)       # next write position
+        self.pos = np.zeros(max_slots, np.int32)       # legacy-path mirror
         self.slot_req: list[Optional[Request]] = [None] * max_slots
         self.pending: list[Request] = []
         self.tracker = ThroughputTracker(
             {"decode": "accelerator", "prefill": "core"}, f0=2.0)
+        self.cycle_log: list[dict] = []                # per-cycle balance
+        self._last_admitted = 0
+        # device-resident decode state (fast path)
+        self.tokens_dev = jnp.zeros(max_slots, jnp.int32)
+        self.pos_dev = jnp.zeros(max_slots, jnp.int32)
+        self.active_dev = jnp.zeros(max_slots, bool)
+        self.remaining_dev = jnp.zeros(max_slots, jnp.int32)
+        # ---- jitted cells -------------------------------------------------
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos, ctx))
         self._prefill = jax.jit(
             lambda p, t: prefill(cfg, p, t, ctx, max_len=max_len))
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._decode_loop = jax.jit(
+            decode_loop_fn(cfg, ctx, num_steps=self.decode_quantum,
+                           eos_id=eos_id, max_len=max_len),
+            donate_argnums=(1, 2, 3, 4, 5))
+        self._prefill_fast = jax.jit(self._prefill_fast_impl)
+        self._admit = jax.jit(self._admit_impl,
+                              donate_argnums=(0, 1, 2, 3, 4))
 
     # ---- cache slot insertion (jitted scatter on the batch dim) ----------
     def _insert_impl(self, cache, one_cache, slot):
@@ -66,20 +116,173 @@ class Engine:
                                                        slot, 1)
         return jax.tree.map(ins, cache, one_cache)
 
+    # ---- fast path: batched prefill + fused admission --------------------
+    def _prefill_fast_impl(self, params, toks, prompt_len):
+        """(P,Sb) padded prompts → (first greedy token (P,), batched cache).
+        Argmax happens on device so admission never ships logits home."""
+        logits, cache = prefill(self.cfg, params, toks, self.ctx,
+                                max_len=self.max_len, prompt_len=prompt_len)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    def _admit_impl(self, cache, tokens, pos, active, remaining, new_cache,
+                    first, prompt_len, max_new, slots, valid):
+        """Scatter a prefilled batch into its engine slots in ONE dispatch.
+
+        Formulated as a gather so it stays shape-stable under jit: for each
+        engine slot s, pick the (at most one) prefill row targeting s and
+        blend it into every cache leaf / state vector.
+        """
+        S = self.max_slots
+        sel = valid[None, :] & (slots[None, :] == jnp.arange(S)[:, None])
+        hit = sel.any(axis=1)                  # (S,) slot receives a row?
+        idx = jnp.argmax(sel, axis=1)          # (S,) which prefill row
+
+        def ins(c, o):
+            g = jnp.take(o, idx, axis=1)       # (repeat, S, …)
+            m = hit.reshape((1, S) + (1,) * (c.ndim - 2))
+            return jnp.where(m, g.astype(c.dtype), c)
+
+        cache = jax.tree.map(ins, cache, new_cache)
+        pl = jnp.take(prompt_len, idx)
+        rem = jnp.take(max_new, idx) - 1       # prefill already emitted one
+        tokens = jnp.where(hit, jnp.take(first, idx), tokens)
+        pos = jnp.where(hit, pl, pos)
+        remaining = jnp.where(hit, rem, remaining)
+        # pl == max_len-1 still gets one decode step (writes the last cache
+        # slot) — matches the legacy path's post-step done check
+        active = jnp.where(hit, (rem > 0) & (pl < self.max_len), active)
+        return cache, tokens, pos, active, remaining
+
     def submit(self, req: Request) -> None:
+        assert len(req.prompt) < self.max_len, (len(req.prompt), self.max_len)
         self.pending.append(req)
 
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
+    def prefill_compiles(self) -> int:
+        """Distinct prefill compiles so far (fast: one per length bucket)."""
+        return _jit_cache_size(self._prefill_fast if self.fast
+                               else self._prefill)
+
     # ---- one engine cycle -------------------------------------------------
     def step(self) -> None:
+        if not self.fast:
+            self._step_legacy()
+            return
+        self._last_admitted = 0
         free = self.free_slots()
+        if self.pending and free:
+            self._admit_pending(free)
+        active_slots = [i for i, r in enumerate(self.slot_req)
+                        if r is not None]
+        if not active_slots:
+            if self._last_admitted:   # everything finished at prefill —
+                self.cycle_log.append({"admitted": self._last_admitted,
+                                       "decoded": 0,
+                                       "f": self.tracker.f()})
+            return
+        t0 = time.perf_counter()
+        carry, toks, msks = self._decode_loop(
+            self.params, self.cache, self.tokens_dev, self.pos_dev,
+            self.active_dev, self.remaining_dev)
+        (self.cache, self.tokens_dev, self.pos_dev, self.active_dev,
+         self.remaining_dev) = carry
+        toks_h = np.asarray(toks)              # ONE host sync per quantum
+        msks_h = np.asarray(msks)
+        act_h = np.asarray(self.active_dev)
+        dt = time.perf_counter() - t0
+        emitted = int(msks_h.sum())
+        if emitted:
+            self.tracker.record("decode", emitted, dt)
+        for q in range(self.decode_quantum):
+            row = msks_h[q]
+            for i in active_slots:
+                if row[i]:
+                    self.slot_req[i].out.append(int(toks_h[q, i]))
+        for i in active_slots:
+            if not act_h[i]:
+                self.slot_req[i].done = True
+                self.slot_req[i] = None
+        self.cycle_log.append({"admitted": self._last_admitted,
+                               "decoded": emitted, "f": self.tracker.f()})
+
+    def _admit_pending(self, free: list[int]) -> None:
+        """HBB chunking law over token units: the decode quantum is the
+        fixed accelerator chunk (S_f = quantum × slots tokens); the prompt-
+        token budget admitted this cycle is the adaptive S_c side."""
+        r_tokens = sum(len(q.prompt) for q in self.pending)
+        budget = cpu_chunk(S_f=self.decode_quantum * self.max_slots,
+                           f=self.tracker.f(), r=r_tokens, n_cores=1)
+        take: list[Request] = []
+        while self.pending and len(take) < len(free):
+            n = len(self.pending[0].prompt)
+            if take and budget < n:            # always admit ≥ 1
+                break
+            budget -= n
+            take.append(self.pending.pop(0))
+        if not take:
+            return
+        self._last_admitted = len(take)
+        groups: dict[int, list[Request]] = {}
+        for req in take:
+            b = (bucket_len(len(req.prompt), min_bucket=self.min_bucket,
+                            max_bucket=self.max_len)
+                 if self.pad_safe else len(req.prompt))
+            groups.setdefault(b, []).append(req)
+        t0 = time.perf_counter()
+        ptoks = 0
+        for Sb in sorted(groups):
+            grp = groups[Sb]
+            for k0 in range(0, len(grp), self.prefill_batch):
+                chunk = grp[k0:k0 + self.prefill_batch]
+                self._prefill_group(Sb, chunk, free)
+                ptoks += sum(len(q.prompt) for q in chunk)
+        self.tracker.record("prefill", ptoks, time.perf_counter() - t0)
+
+    def _prefill_group(self, Sb: int, reqs: list[Request],
+                       free: list[int]) -> None:
+        # fixed batch for padded buckets (one compile per bucket); smallest
+        # power-of-2 batch for exact-length (mamba) groups
+        P = (self.prefill_batch if self.pad_safe
+             else 1 << (len(reqs) - 1).bit_length())
+        toks = np.zeros((P, Sb), np.int32)
+        pl = np.ones(P, np.int32)
+        mn = np.ones(P, np.int32)
+        valid = np.zeros(P, bool)
+        slots = np.zeros(P, np.int32)
+        for j, req in enumerate(reqs):
+            toks[j, :len(req.prompt)] = req.prompt
+            pl[j] = len(req.prompt)
+            mn[j] = req.max_new
+            valid[j] = True
+            slots[j] = free.pop(0)
+        first, new_cache = self._prefill_fast(self.params, jnp.asarray(toks),
+                                              jnp.asarray(pl))
+        (self.cache, self.tokens_dev, self.pos_dev, self.active_dev,
+         self.remaining_dev) = self._admit(
+            self.cache, self.tokens_dev, self.pos_dev, self.active_dev,
+            self.remaining_dev, new_cache, first, jnp.asarray(pl),
+            jnp.asarray(mn), jnp.asarray(slots), jnp.asarray(valid))
+        first_h = np.asarray(first)            # one sync per admitted group
+        for j, req in enumerate(reqs):
+            req.out.append(int(first_h[j]))
+            if req.max_new <= 1:
+                req.done = True                # budget spent at prefill
+                free.insert(0, int(slots[j]))
+            else:
+                self.slot_req[int(slots[j])] = req
+
+    # ---- reference slow path (pre-fast-path engine, kept for baselines) --
+    def _step_legacy(self) -> None:
+        free = self.free_slots()
+        admitted = 0
         if self.pending and free:
             r = len(self.pending)
             admit = cpu_chunk(S_f=self.max_slots, f=self.tracker.f(), r=r,
                               n_cores=1)
             admit = max(1, min(admit, len(free), r))
+            admitted = admit
             t0 = time.perf_counter()
             for _ in range(admit):
                 req = self.pending.pop(0)
@@ -90,6 +293,9 @@ class Engine:
                                           jnp.int32(slot))
                 nxt = int(jnp.argmax(logits[0]))
                 req.out.append(nxt)
+                if req.max_new <= 1:           # budget spent at prefill
+                    req.done = True            # (stream parity w/ fast path)
+                    continue
                 self.slot_req[slot] = req
                 self.pos[slot] = len(req.prompt)
             self.tracker.record("prefill", admit, time.perf_counter() - t0)
@@ -114,6 +320,8 @@ class Engine:
                     or self.pos[i] >= self.max_len - 1):
                 req.done = True
                 self.slot_req[i] = None
+        self.cycle_log.append({"admitted": admitted, "decoded": len(active),
+                               "f": self.tracker.f()})
 
     def run(self, requests: list[Request]) -> list[Request]:
         for r in requests:

@@ -7,6 +7,11 @@ makes h2o-danube's long_500k cell cheap: 4096-slot cache at 512 k context).
 MLA layers: one compressed (B, S_c, kv_lora+rope) tensor — the cache *is*
 the latent. Mamba layers: O(1) conv+ssm state. Whisper: tiny self cache
 (replicated S=448) + a seq-sharded cross-KV built at prefill.
+
+The serving fast path (DESIGN.md §5) depends on these defs being sized by
+the engine's `max_len` only — never by prompt length — so every prefill
+bucket produces identically-shaped cache leaves and the engine's batched
+insert / donated decode loop stay shape-stable across buckets.
 """
 from __future__ import annotations
 

@@ -6,6 +6,14 @@ with training — tested by decode-vs-full-forward equivalence tests.
 
 Cache layout matches serve.kv_cache exactly (kv_seq sharded over ``model``;
 ring layout for windowed layers: position p lands in slot p mod window).
+
+Bucketed serving fast path (DESIGN.md §"Serving fast path"): prompts are
+right-padded to a power-of-2 length bucket and prefilled *batched* with an
+explicit per-row ``prompt_len``. Causality guarantees real rows never attend
+pad keys; the last-token logits are gathered at ``prompt_len - 1`` per row,
+and ring caches are packed by a position-mod-window gather that skips pad
+positions entirely. One XLA compile per bucket instead of one per distinct
+prompt length.
 """
 from __future__ import annotations
 
@@ -43,9 +51,45 @@ def _ring_pack(k: jax.Array, Sc: int):
     return jnp.roll(tail, shift, axis=1)
 
 
+def bucket_len(n: int, *, min_bucket: int = 16,
+               max_bucket: int | None = None) -> int:
+    """Smallest power-of-2 length bucket holding an n-token prompt.
+
+    Bounded below by `min_bucket` (tiny prompts share one compile) and above
+    by `max_bucket` (the engine's max_len); n must fit the cap.
+    """
+    b = max(min_bucket, 1 << (max(int(n), 1) - 1).bit_length())
+    if max_bucket is not None:
+        b = min(b, max_bucket)
+    assert b >= n, (n, b, max_bucket)
+    return b
+
+
+def _ring_pack_pl(k: jax.Array, Sc: int, prompt_len: jax.Array):
+    """Per-row ring pack: (B,S,…) + prompt_len (B,) → (B,Sc,…) where ring
+    slot j holds the *last* real position p ≤ prompt_len-1 with p ≡ j
+    (mod Sc). Pad positions (≥ prompt_len) never enter the ring — a plain
+    tail-roll would let them displace real tokens whenever the padded
+    bucket length exceeds the window."""
+    S = k.shape[1]
+    j = jnp.arange(Sc)
+    last = prompt_len[:, None] - 1                          # (B, 1)
+    p_j = last - ((last - j[None, :]) % Sc)                 # (B, Sc)
+    valid = p_j >= 0                                        # slot occupied?
+    idx = jnp.clip(p_j, 0, S - 1).reshape(p_j.shape + (1,) * (k.ndim - 2))
+    g = jnp.take_along_axis(k, idx, axis=1)
+    mask = valid.reshape(valid.shape + (1,) * (k.ndim - 2))
+    return jnp.where(mask, g, jnp.zeros((), k.dtype))
+
+
 def gqa_prefill(cfg: ModelConfig, p, x, ctx: ShardCtx, *, window, positions,
-                seq_len_cache: int):
-    """Attention + cache build. x (B,S,D) → (out, {"k","v"})."""
+                seq_len_cache: int, prompt_len=None):
+    """Attention + cache build. x (B,S,D) → (out, {"k","v"}).
+
+    `prompt_len` (B,) marks right-padded rows (bucketed fast path): the
+    causal mask already keeps real rows from attending pad keys, but ring
+    caches must pack per-row so pad positions can't wrap onto real ones.
+    """
     B, S = x.shape[:2]
     if attn_mod._cp_eligible(cfg, ctx):
         o, k, v = attn_mod.cp_gqa_attention(cfg, p, x, ctx, window=window,
@@ -61,8 +105,16 @@ def gqa_prefill(cfg: ModelConfig, p, x, ctx: ShardCtx, *, window, positions,
         out = out.reshape(B, S, cfg.n_heads, cfg.head_dim)
         o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
         o = ctx.constrain(o, ("batch", "seq", None))
-    ck = _ring_pack(k, seq_len_cache) if window else _pad_to(k, seq_len_cache)
-    cv = _ring_pack(v, seq_len_cache) if window else _pad_to(v, seq_len_cache)
+    if window and prompt_len is not None:
+        ck = _ring_pack_pl(k, seq_len_cache, prompt_len)
+        cv = _ring_pack_pl(v, seq_len_cache, prompt_len)
+    elif window:
+        ck = _ring_pack(k, seq_len_cache)
+        cv = _ring_pack(v, seq_len_cache)
+    else:
+        # non-ring: pad rows land at positions ≥ prompt_len, which decode
+        # never attends before overwriting — no per-row repack needed
+        ck, cv = _pad_to(k, seq_len_cache), _pad_to(v, seq_len_cache)
     ck = ctx.constrain(ck, ("batch", "kv_seq", "kv_heads", None))
     cv = ctx.constrain(cv, ("batch", "kv_seq", "kv_heads", None))
     return o, {"k": ck, "v": cv}
@@ -96,7 +148,8 @@ def mla_prefill(cfg: ModelConfig, p, x, ctx: ShardCtx, *, positions,
 
 
 def block_prefill(cfg: ModelConfig, bc: BlockCfg, p, h, ctx: ShardCtx,
-                  positions, seq_len: int, max_len: int | None = None):
+                  positions, seq_len: int, max_len: int | None = None,
+                  prompt_len=None):
     msize = ctx.axis_size("model")
     x = rmsnorm(h, p["norm1"], cfg.norm_eps)
     if bc.mixer == "attn":
@@ -106,7 +159,8 @@ def block_prefill(cfg: ModelConfig, bc: BlockCfg, p, h, ctx: ShardCtx,
                                    seq_len_cache=Sc)
         else:
             y, cache = gqa_prefill(cfg, p["attn"], x, ctx, window=bc.window,
-                                   positions=positions, seq_len_cache=Sc)
+                                   positions=positions, seq_len_cache=Sc,
+                                   prompt_len=prompt_len)
     else:
         mixer = (mamba_mod.mamba2_mixer if cfg.ssm.version == 2
                  else mamba_mod.mamba1_mixer)
@@ -127,10 +181,18 @@ def block_prefill(cfg: ModelConfig, bc: BlockCfg, p, h, ctx: ShardCtx,
 
 
 def prefill(cfg: ModelConfig, params, tokens, ctx: ShardCtx,
-            frontend_embed=None, max_len: int | None = None):
+            frontend_embed=None, max_len: int | None = None,
+            prompt_len=None):
     """tokens (B,S) → (last-token logits (B,V), cache). The lowered
     `prefill_32k` dry-run cell. `max_len` sizes the cache for further
-    decoding (engine use); default = S (dry-run cell)."""
+    decoding (engine use); default = S (dry-run cell).
+
+    `prompt_len` (B,) enables the bucketed fast path: rows are real for
+    positions < prompt_len and right-padding beyond; logits are gathered at
+    prompt_len-1 per row. Only valid for attention-mixer models — mamba
+    state scans would absorb the pad tokens (the engine falls back to
+    exact-length prefill there).
+    """
     segments = layer_schedule(cfg)
     S = tokens.shape[1]
     h = embed(cfg, params["embed"], tokens, ctx, frontend_embed)
@@ -142,7 +204,8 @@ def prefill(cfg: ModelConfig, params, tokens, ctx: ShardCtx,
             caches = {}
             for j, bc in enumerate(seg.pattern):
                 hc, c = block_prefill(cfg, bc, slot_params[f"s{j}"], hc, ctx,
-                                      positions, S, max_len)
+                                      positions, S, max_len,
+                                      prompt_len=prompt_len)
                 caches[f"s{j}"] = c
             return hc, caches
 
@@ -151,7 +214,11 @@ def prefill(cfg: ModelConfig, params, tokens, ctx: ShardCtx,
         new_blocks.append(caches)
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     h = ctx.constrain(h, ("batch", None, None))
-    last = h[:, -1, :]
+    if prompt_len is None:
+        last = h[:, -1, :]
+    else:
+        idx = jnp.clip(prompt_len - 1, 0, S - 1)
+        last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
     w = (params["embed"]["table"].T if cfg.tie_embeddings
          else params["unembed"]["w"])
     logits = jnp.einsum("bd,dv->bv", last, w.astype(last.dtype),

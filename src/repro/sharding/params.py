@@ -12,6 +12,7 @@ A model declares its parameters once as a pytree of :class:`ParamDef`
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any
 
 import jax
@@ -90,12 +91,16 @@ def _init_leaf(d: ParamDef, key) -> jax.Array:
 
 
 def materialize(defs, key: jax.Array):
-    """Deterministic init: every leaf's key is fold_in(path-hash)."""
-    leaves, treedef = jax.tree.flatten_with_path(defs, is_leaf=is_def)
+    """Deterministic init: every leaf's key is fold_in(path-hash).
+
+    crc32, not builtin hash(): string hashes are salted per process, which
+    made "deterministic" init differ between two runs of the same script.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_def)
     out = []
     for path, d in leaves:
         pstr = "/".join(str(p) for p in path)
-        k = jax.random.fold_in(key, abs(hash(pstr)) % (2**31))
+        k = jax.random.fold_in(key, zlib.crc32(pstr.encode()) % (2**31))
         out.append(_init_leaf(d, k))
     return jax.tree.unflatten(treedef, out)
 

@@ -27,7 +27,7 @@ _EXOTIC = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
 
 
 def _flatten(state):
-    leaves, treedef = jax.tree.flatten_with_path(state)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
     out = {}
     for path, leaf in leaves:
         key = "/".join(str(p) for p in path)

@@ -1,0 +1,47 @@
+"""Property tests on the block-pair enumeration (hypothesis-based).
+
+Split out of test_attention.py so a missing hypothesis install skips this
+module instead of erroring the whole attention suite at collection.
+"""
+import pytest
+
+_hyp = pytest.importorskip("hypothesis")
+if getattr(_hyp, "__is_shim__", False):     # conftest stub, not the real lib
+    pytest.skip("hypothesis not installed", allow_module_level=True)
+
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import block_pairs
+
+
+@settings(max_examples=60, deadline=None)
+@given(Tq=st.integers(8, 96), Tk=st.integers(8, 96),
+       qc=st.sampled_from([8, 16, 32]), kc=st.sampled_from([8, 16, 32]),
+       window=st.sampled_from([0, 8, 24]), causal=st.booleans())
+def test_block_pairs_cover_all_unmasked(Tq, Tk, qc, kc, window, causal):
+    """Every (i,j) the mask allows lies in some enumerated block pair, and
+    enumerated pairs contain at least one allowed position."""
+    qo = max(0, Tk - Tq) if causal else 0
+    pairs = set(map(tuple, block_pairs(Tq, Tk, qc, kc, causal=causal,
+                                       window=window, q_offset=qo)))
+    for i in range(Tq):
+        gi = i + qo
+        for j in range(Tk):
+            allowed = (not causal or j <= gi) and \
+                      (not window or j > gi - window)
+            if allowed:
+                assert (i // qc, j // kc) in pairs
+    # no fully-masked pair in the list
+    for (pi, pj) in pairs:
+        any_ok = False
+        for i in range(pi * qc, min(pi * qc + qc, Tq)):
+            gi = i + qo
+            lo = max(pj * kc, 0)
+            hi = min(pj * kc + kc, Tk)
+            for j in range(lo, hi):
+                if (not causal or j <= gi) and (not window or j > gi - window):
+                    any_ok = True
+                    break
+            if any_ok:
+                break
+        assert any_ok, (pi, pj)

@@ -87,6 +87,125 @@ def test_whisper_prefill_decode(ctx):
     assert rel < 3e-2, rel
 
 
+# ---------------------------------------------------- serving fast path
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b",      # sliding window
+                                  "mistral-nemo-12b",     # full attention
+                                  "deepseek-v2-236b"])    # MLA
+def test_bucketed_prefill_equivalence(arch, ctx):
+    """Prefill padded to a power-of-2 bucket with explicit prompt_len must
+    match exact-length prefill: same last-token logits, and (the ring-pack
+    gather check) the same continuation tokens when decoding onward."""
+    from repro.serve.decode import decode_loop
+
+    cfg = smoke_config(all_configs()[arch])
+    params = prm.materialize(model_defs(cfg), jax.random.PRNGKey(0))
+    B, S, Sb, max_len = 2, 21, 32, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    ref_logits, ref_cache = prefill(cfg, params, toks, ctx, max_len=max_len)
+    padded = jnp.pad(toks, ((0, 0), (0, Sb - S)))
+    pl = jnp.full((B,), S, jnp.int32)
+    logits, cache = prefill(cfg, params, padded, ctx, max_len=max_len,
+                            prompt_len=pl)
+    # bf16 reduction order differs between S and Sb chunkings → repo-wide
+    # 3e-2 relative tolerance (same metric as the decode-vs-forward tests)
+    rel = float(np.max(np.abs(np.array(logits) - np.array(ref_logits)))) / \
+        max(1e-9, float(np.max(np.abs(np.array(ref_logits)))))
+    assert rel < 3e-2, (arch, rel)
+    assert (np.array(logits).argmax(-1) ==
+            np.array(ref_logits).argmax(-1)).all()
+    # decode far enough past the window to exercise the ring wrap
+    start = jnp.argmax(ref_logits, -1).astype(jnp.int32)
+    args = (start, pl, jnp.ones(B, bool), jnp.full((B,), 99, jnp.int32))
+    _, ref_toks, _ = decode_loop(cfg, params, ref_cache, *args, ctx,
+                                 num_steps=12, eos_id=-1, max_len=max_len)
+    _, fast_toks, _ = decode_loop(cfg, params, cache, *args, ctx,
+                                  num_steps=12, eos_id=-1, max_len=max_len)
+    np.testing.assert_array_equal(np.array(ref_toks), np.array(fast_toks))
+
+
+def test_quantum_decode_equivalence(ctx):
+    """N scanned decode steps ≡ N single decode steps (tokens and masking)."""
+    from repro.serve.decode import decode_loop
+
+    cfg = smoke_config(all_configs()["h2o-danube-1.8b"])
+    params = prm.materialize(model_defs(cfg), jax.random.PRNGKey(0))
+    B, S, N, max_len = 3, 12, 8, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    logits, cache = prefill(cfg, params, toks, ctx, max_len=max_len)
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos0 = jnp.full((B,), S, jnp.int32)
+    remaining = jnp.asarray([N + 5, 4, N + 5], jnp.int32)  # row 1 stops early
+    (_, _, pos, active, rem), loop_toks, loop_msks = decode_loop(
+        cfg, params, cache, tok0, pos0, jnp.ones(B, bool), remaining, ctx,
+        num_steps=N, eos_id=-1, max_len=max_len)
+    # reference: single steps with host-side masking
+    cache_s, tok, pos_s = cache, tok0, pos0
+    ref = np.full((N, B), -1, np.int32)
+    alive = np.ones(B, bool)
+    budget = np.array(remaining)
+    for t in range(N):
+        logits, cache_s = decode_step(cfg, params, cache_s, tok, pos_s, ctx)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        ref[t, alive] = np.array(nxt)[alive]
+        budget -= alive
+        pos_s = pos_s + jnp.asarray(alive)
+        alive = alive & (budget > 0)
+        tok = jnp.where(jnp.asarray(alive), nxt, tok)
+    np.testing.assert_array_equal(np.array(loop_toks), ref)
+    assert np.array_equal(np.array(active), alive)
+    assert np.array_equal(np.array(pos), np.array(pos_s))
+    assert np.array_equal(np.array(rem), budget)
+
+
+def test_engine_fast_matches_legacy(ctx):
+    """Same workload through the fast path and the reference path produces
+    identical streams; fast prefill compiles once per bucket."""
+    cfg = smoke_config(all_configs()["h2o-danube-1.8b"])
+    rng = np.random.default_rng(3)
+    lens = [4, 5, 9, 17, 18, 23, 63]        # buckets: 16, 32, 64;
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in lens]
+    # 63 = max_len-1: prefill fills the penultimate slot, exactly one decode
+    # step remains — the boundary where fast/legacy done-checks must agree
+
+    def serve(fast):
+        eng = make_engine(cfg, ctx, max_slots=3, max_len=64, fast=fast,
+                          decode_quantum=4)
+        # max_new=1 finishes at prefill — both paths must stop there
+        reqs = [Request(rid=i, prompt=p, max_new=1 if i == 1 else 6)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)
+        return eng, reqs
+
+    eng_f, fast = serve(True)
+    _, legacy = serve(False)
+    assert all(r.done for r in fast)
+    for a, b in zip(fast, legacy):
+        assert a.out == b.out, (a.rid, a.out, b.out)
+    compiles = eng_f.prefill_compiles()
+    assert compiles in (-1, 3), compiles   # one per bucket, not one per length
+
+
+def test_engine_fast_mamba_exact_length_fallback(ctx):
+    """Mamba mixers can't absorb pad tokens, so the fast engine falls back
+    to exact-length (but still batched) prefill and stays correct."""
+    cfg = smoke_config(all_configs()["mamba2-130m"])
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (5, 5, 9)]
+
+    def serve(fast):
+        eng = make_engine(cfg, ctx, max_slots=2, max_len=48, fast=fast,
+                          decode_quantum=3)
+        assert eng.pad_safe is False
+        reqs = [Request(rid=i, prompt=p, max_new=4)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)
+        return reqs
+
+    fast, legacy = serve(True), serve(False)
+    for a, b in zip(fast, legacy):
+        assert a.done and a.out == b.out, (a.rid, a.out, b.out)
+
+
 def test_engine_continuous_batching(ctx):
     cfg = smoke_config(all_configs()["h2o-danube-1.8b"])
     eng = make_engine(cfg, ctx, max_slots=3, max_len=64)
