@@ -1,5 +1,6 @@
 """Serving fast-path benchmark: fused quantum decode + bucketed batched
-prefill + cache donation vs. the reference per-token engine.
+prefill + cache donation vs. the reference per-token engine, plus the paged
+KV cache vs. dense per-slot rows.
 
     PYTHONPATH=src python -m benchmarks.bench_serve
 
@@ -10,7 +11,14 @@ recompiles per length):
   * prefill compile count (jit cache probe): fast = one per length bucket,
     legacy = one per distinct prompt length;
   * per-cycle scheduler balance: mean admitted prompts vs. decoded tokens
-    per engine cycle and the final HBB `f` ratio.
+    per engine cycle and the final HBB `f` ratio;
+  * memory: reserved KV-cache bytes (paged pool vs dense rows, sized for
+    the same workload) and the max context a single request could grow to
+    inside the dense engine's HBM budget.
+
+The paged-vs-dense comparison runs on a full-attention arch (mistral-nemo)
+— sliding-window archs keep their O(window) rings and would not exercise
+the pool.
 """
 from __future__ import annotations
 
@@ -19,6 +27,10 @@ import time
 from pathlib import Path
 
 import numpy as np
+
+MAX_SLOTS = 4
+MAX_LEN = 64
+PAGE_SIZE = 8
 
 
 def _workload(cfg, n_requests: int, max_new: int, seed: int = 0):
@@ -29,32 +41,66 @@ def _workload(cfg, n_requests: int, max_new: int, seed: int = 0):
             enumerate(lens)]
 
 
-def serve_once(fast: bool, *, arch: str = "h2o-danube-1.8b",
+def _workload_pool_pages(workload, max_new: int, decode_quantum: int) -> int:
+    """Pool sized to the workload's worst case (+ the reserved trash page)
+    instead of max_slots × max_len — the memory the paged engine banks."""
+    from repro.serve.engine import worst_case_pages
+
+    max_prompt = max(len(p) for _, p in workload)
+    return 1 + MAX_SLOTS * worst_case_pages(max_prompt, max_new,
+                                            decode_quantum, MAX_LEN,
+                                            PAGE_SIZE)
+
+
+def serve_once(mode: str, *, arch: str = "h2o-danube-1.8b",
                n_requests: int = 12, max_new: int = 16,
-               decode_quantum: int = 8, seed: int = 0) -> dict:
+               decode_quantum: int = 8, seed: int = 0,
+               warmup: bool = False, reps: int = 1) -> dict:
+    """mode: "fast" | "legacy" | "paged". `warmup` pre-runs a small workload
+    so the timed pass measures steady state (used for the paged-vs-dense
+    memory comparison, where compile counts are identical by construction
+    and the interesting number is the per-token cost of page indirection);
+    `reps` re-runs the timed workload and keeps the fastest pass (host
+    scheduling noise dwarfs the per-token delta on CPU smoke)."""
     from repro.configs import get_config, smoke_config
     from repro.serve.engine import Request, make_engine
     from repro.sharding.axes import single_device_ctx
 
     cfg = smoke_config(get_config(arch))
     ctx = single_device_ctx()
-    eng = make_engine(cfg, ctx, max_slots=4, max_len=64, fast=fast,
-                      decode_quantum=decode_quantum)
-    reqs = [Request(rid=i, prompt=p, max_new=max_new)
-            for i, p in _workload(cfg, n_requests, max_new, seed)]
-    t0 = time.perf_counter()
-    eng.run(reqs)
-    dt = time.perf_counter() - t0
+    work = _workload(cfg, n_requests, max_new, seed)
+    warm_work = _workload(cfg, 4, max_new, seed + 1) if warmup else []
+    kw = {}
+    if mode == "paged":
+        # size for the timed workload AND the (slightly longer) warmup pass
+        kw = dict(paged=True, page_size=PAGE_SIZE,
+                  num_pages=_workload_pool_pages(work + warm_work,
+                                                 max_new + 1, decode_quantum))
+    eng = make_engine(cfg, ctx, max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                      fast=mode != "legacy", decode_quantum=decode_quantum,
+                      **kw)
+    if warmup:
+        eng.run([Request(rid=-1 - i, prompt=p, max_new=max_new + 1)
+                 for i, p in warm_work])
+    dt = float("inf")
+    for rep in range(max(1, reps)):
+        reqs = [Request(rid=1000 * rep + i, prompt=p, max_new=max_new)
+                for i, p in work]
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = min(dt, time.perf_counter() - t0)
     tok = sum(len(r.out) for r in reqs)
     cycles = eng.cycle_log or [{"admitted": 0, "decoded": 0, "f": 0.0}]
     return {
-        "mode": "fast" if fast else "legacy",
+        "mode": mode,
+        "arch": arch,
         "tok": tok,
         "dt": dt,
         "tok_s": tok / dt,
         "prefill_compiles": eng.prefill_compiles(),
         "distinct_prompt_lens": len({len(r.prompt) for r in reqs}),
         "f": eng.tracker.f(),
+        "reserved_cache_bytes": eng.reserved_cache_bytes(),
         "mean_admitted_per_cycle": float(np.mean([c["admitted"]
                                                   for c in cycles])),
         "mean_decoded_per_cycle": float(np.mean([c["decoded"]
@@ -64,17 +110,39 @@ def serve_once(fast: bool, *, arch: str = "h2o-danube-1.8b",
     }
 
 
+def paged_rows(**kw) -> list[dict]:
+    """Dense-fast vs paged on a full-attention arch, with memory columns."""
+    from repro.configs import get_config, smoke_config
+    from repro.serve.kv_cache import page_bytes
+
+    kw.setdefault("arch", "mistral-nemo-12b")
+    kw.setdefault("warmup", True)
+    kw.setdefault("reps", 3)
+    dense = serve_once("fast", **kw)
+    paged = serve_once("paged", **kw)
+    paged["tok_s_vs_dense"] = paged["tok_s"] / max(dense["tok_s"], 1e-9)
+    cfg = smoke_config(get_config(kw["arch"]))
+    # longest context one request could occupy inside the DENSE engine's
+    # cache budget, were it granted every page (page-table width permitting)
+    per_page = max(1, page_bytes(cfg, PAGE_SIZE))
+    paged["max_ctx_at_dense_hbm"] = (
+        (dense["reserved_cache_bytes"] // per_page - 1) * PAGE_SIZE)
+    dense["max_ctx_at_dense_hbm"] = MAX_LEN      # one dense row, fixed
+    return [dense, paged]
+
+
 def rows(**kw) -> list[dict]:
-    fast = serve_once(True, **kw)
-    legacy = serve_once(False, **kw)
+    fast = serve_once("fast", **kw)
+    legacy = serve_once("legacy", **kw)
     fast["speedup_vs_legacy"] = fast["tok_s"] / max(legacy["tok_s"], 1e-9)
     legacy["speedup_vs_legacy"] = 1.0
     return [fast, legacy]
 
 
-def csv_rows(out: list[dict]) -> list[str]:
+def csv_rows(out: list[dict], mem: list[dict] | None) -> list[str]:
     """Harness-contract ``name,us_per_call,derived`` rows (shared with
-    benchmarks/run.py so the two emitters can't drift)."""
+    benchmarks/run.py so the two emitters can't drift). `mem` is None when
+    the paged comparison is unavailable."""
     lines = []
     for r in out:
         us = r["dt"] / max(r["tok"], 1) * 1e6
@@ -83,14 +151,23 @@ def csv_rows(out: list[dict]) -> list[str]:
                      f"{r['prefill_compiles']}")
     lines.append(f"serve/speedup_fast_over_legacy,0,"
                  f"{out[0]['speedup_vs_legacy']:.2f}")
+    for r in mem or []:
+        us = r["dt"] / max(r["tok"], 1) * 1e6
+        lines.append(f"serve/mem/{r['mode']}/reserved_cache_kb,{us:.0f},"
+                     f"{r['reserved_cache_bytes'] / 1024:.1f}")
+        lines.append(f"serve/mem/{r['mode']}/max_ctx_at_dense_hbm,{us:.0f},"
+                     f"{r['max_ctx_at_dense_hbm']}")
+    if mem:
+        lines.append(f"serve/mem/paged_tok_s_vs_dense,0,"
+                     f"{mem[1]['tok_s_vs_dense']:.2f}")
     return lines
 
 
-def write_bench_json(out: list[dict],
+def write_bench_json(out: list[dict], mem: list[dict] | None,
                      path: str | Path = "BENCH_1.json") -> None:
     """The per-PR perf artifact — one writer, shared by main(), run.py, CI."""
     fast, legacy = out
-    Path(path).write_text(json.dumps({
+    doc = {
         "bench": "serve_fast_path",
         "arch": "h2o-danube-1.8b (smoke)",
         "serve_tok_s": fast["tok_s"],
@@ -100,16 +177,30 @@ def write_bench_json(out: list[dict],
         "prefill_compiles_legacy": legacy["prefill_compiles"],
         "distinct_prompt_lens": fast["distinct_prompt_lens"],
         "f_ratio": fast["f"],
-    }, indent=2) + "\n")
+    }
+    if mem:
+        dense, paged = mem
+        doc.update({
+            "paged_arch": paged["arch"] + " (smoke)",
+            "paged_tok_s": paged["tok_s"],
+            "paged_tok_s_vs_dense": paged["tok_s_vs_dense"],
+            "paged_reserved_cache_bytes": paged["reserved_cache_bytes"],
+            "dense_reserved_cache_bytes": dense["reserved_cache_bytes"],
+            "paged_max_ctx_at_dense_hbm": paged["max_ctx_at_dense_hbm"],
+            "dense_max_ctx": dense["max_ctx_at_dense_hbm"],
+        })
+    Path(path).write_text(json.dumps(doc, indent=2) + "\n")
 
 
 def main() -> None:
     out = rows()
+    mem = paged_rows()
     fast, legacy = out
+    dense, paged = mem
     print("name,us_per_call,derived")
-    for line in csv_rows(out):
+    for line in csv_rows(out, mem):
         print(line)
-    write_bench_json(out)
+    write_bench_json(out, mem)
     print(f"# fast: {fast['tok']} tok in {fast['dt']:.2f}s "
           f"({fast['tok_s']:.1f} tok/s), {fast['prefill_compiles']} prefill "
           f"compiles for {fast['distinct_prompt_lens']} distinct lengths, "
@@ -118,7 +209,16 @@ def main() -> None:
     print(f"# legacy: {legacy['tok']} tok in {legacy['dt']:.2f}s "
           f"({legacy['tok_s']:.1f} tok/s), {legacy['prefill_compiles']} "
           f"prefill compiles")
+    print(f"# paged ({paged['arch']}): {paged['tok_s']:.1f} tok/s "
+          f"({paged['tok_s_vs_dense']:.2f}× dense), reserved cache "
+          f"{paged['reserved_cache_bytes'] / 1024:.0f} KiB vs dense "
+          f"{dense['reserved_cache_bytes'] / 1024:.0f} KiB, max single "
+          f"context at dense HBM {paged['max_ctx_at_dense_hbm']} vs "
+          f"{dense['max_ctx_at_dense_hbm']} tokens")
     assert fast["all_done"] and legacy["all_done"]
+    assert dense["all_done"] and paged["all_done"]
+    assert paged["reserved_cache_bytes"] < dense["reserved_cache_bytes"], (
+        "paged pool must reserve less HBM than dense rows")
 
 
 if __name__ == "__main__":

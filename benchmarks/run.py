@@ -65,14 +65,20 @@ def main() -> None:
         print(f"scaling/{r['size']}/ultra_over_zynq,{us:.0f},"
               f"{r['ultra_over_zynq']:.2f}")
 
-    # --- Serving fast path (tokens/sec baseline, PR 1) --------------------
+    # --- Serving fast path + paged KV cache (PR 1 / PR 2) -----------------
     try:
-        from benchmarks.bench_serve import (csv_rows, rows as serve_rows,
+        from benchmarks.bench_serve import (csv_rows, paged_rows,
+                                            rows as serve_rows,
                                             write_bench_json)
         srows = serve_rows()
-        for line in csv_rows(srows):
+        try:
+            mem = paged_rows()
+        except Exception as e:  # keep the PR-1 serve baseline either way
+            mem = None
+            print(f"serve/paged_unavailable,0,0  # {e}")
+        for line in csv_rows(srows, mem):
             print(line)
-        write_bench_json(srows)
+        write_bench_json(srows, mem)
     except Exception as e:  # serving bench must not sink the driver
         print(f"serve/unavailable,0,0  # {e}")
 

@@ -4,6 +4,8 @@ per-request streams.
 
     PYTHONPATH=src python examples/serve_batch.py --arch h2o-danube-1.8b
     PYTHONPATH=src python examples/serve_batch.py --legacy   # per-token path
+    PYTHONPATH=src python examples/serve_batch.py \
+        --arch mistral-nemo-12b --paged   # shared KV page pool
 """
 import argparse
 import time
@@ -23,13 +25,17 @@ def main():
     ap.add_argument("--decode-quantum", type=int, default=8)
     ap.add_argument("--legacy", action="store_true",
                     help="reference per-token engine (no buckets/quantum)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (shared page pool + per-slot "
+                         "page table; full-attention archs)")
     args = ap.parse_args()
 
     cfg = smoke_config(get_config(args.arch))
     ctx = single_device_ctx()
     eng = make_engine(cfg, ctx, max_slots=4, max_len=96,
                       fast=not args.legacy,
-                      decode_quantum=args.decode_quantum)
+                      decode_quantum=args.decode_quantum,
+                      paged=args.paged, page_size=8)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,
@@ -45,6 +51,12 @@ def main():
           f"{eng.tracker.f():.2f}; prefill compiles = "
           f"{eng.prefill_compiles()} for "
           f"{len({len(r.prompt) for r in reqs})} distinct prompt lengths")
+    if args.paged:
+        al = eng.alloc
+        print(f"  page pool: {al.usable_pages} usable pages × "
+              f"{eng.page_size} tokens, peak in use "
+              f"{al.usable_pages - al.min_free}, {al.total_grants} grants, "
+              f"reserved cache {eng.reserved_cache_bytes() / 1024:.0f} KiB")
     for r in reqs:
         print(f"  req {r.rid:2d} prompt[{len(r.prompt):2d}] → {r.out}")
 

@@ -55,22 +55,98 @@ def _local_write(cache, new_row, rel):
     return cache.at[b, relc].set(upd)
 
 
+def _paged_write(pool, new_row, pt, pos, i, msize):
+    """Masked write of `new_row` (B,…) at logical position `pos` (B,) through
+    page table `pt` (B,T) into `pool` (N, ps_loc, …). Shard `i` owns in-page
+    offsets [i·ps_loc, (i+1)·ps_loc); out-of-range rows are a no-op. Distinct
+    live slots hold disjoint pages (allocator invariant), so batch scatters
+    never collide except on the reserved trash page 0."""
+    B = new_row.shape[0]
+    N, ps_loc = pool.shape[0], pool.shape[1]
+    T = pt.shape[1]
+    ps = ps_loc * msize
+    idx = jnp.minimum(pos // ps, T - 1)
+    page = jnp.take_along_axis(pt, idx[:, None], axis=1)[:, 0]
+    # a slot frozen at pos == max_len (prompt_len = max_len-1 case) still
+    # scribbles each step; route it to the trash page, never a live one
+    page = jnp.where(pos < T * ps, page, 0)
+    if msize == 1:          # every offset is in range on a 1-shard model axis
+        return pool.at[page, pos % ps].set(new_row)
+    rel = pos % ps - i * ps_loc
+    in_range = (rel >= 0) & (rel < ps_loc)
+    relc = jnp.clip(rel, 0, ps_loc - 1)
+    pagec = jnp.clip(page, 0, N - 1)
+    cur = pool[pagec, relc]                                # (B, …)
+    mask = in_range.reshape((B,) + (1,) * (pool.ndim - 2))
+    return pool.at[pagec, relc].set(jnp.where(mask, new_row, cur))
+
+
+def _paged_gather(pool, pt, i, msize):
+    """Gather a slot's pages into position order: pool (N, ps_loc, …) +
+    pt (B,T) → (view (B, T·ps_loc, …), gpos (T·ps_loc,) global positions
+    this shard holds)."""
+    ps_loc = pool.shape[1]
+    T = pt.shape[1]
+    ps = ps_loc * msize
+    g = jnp.take(pool, pt, axis=0)                         # (B, T, ps_loc, …)
+    g = g.reshape((pt.shape[0], T * ps_loc) + pool.shape[2:])
+    gpos = (jnp.arange(T)[:, None] * ps + i * ps_loc +
+            jnp.arange(ps_loc)[None]).reshape(-1)
+    return g, gpos
+
+
 def flash_decode_gqa(q, k_new, v_new, ck, cv, pos, *, window: int,
                      scale: float, softcap: float, ctx: ShardCtx,
-                     update: bool = True):
+                     update: bool = True, page_table=None):
     """q (B,Hkv,G,dh); k_new/v_new (B,Hkv,dh); ck/cv (B,Sc,Hkv,dh) kv_seq-
     sharded; pos (B,). → (out (B,Hkv,G,dh), ck', cv').
 
     update=False → attend-only (whisper cross-attention; pos = valid_len-1).
+    page_table (B,T) int32 → paged mode: ck/cv are shared page pools
+    (num_pages, page_size, Hkv, dh) with the in-page offset kv_seq-sharded;
+    the slot's pages are gathered into position order before the same
+    exact-softmax partial combine (full attention only — rings stay dense).
     """
     mesh = ctx.mesh
     bp = ctx.spec(("batch", None, None, None), q.shape)[0]
     qspec = P(bp, None, None, None)
     nspec = P(bp, None, None)
-    cspec = ctx.spec(("batch", "kv_seq", "kv_heads", None), ck.shape)
     pspec = P(bp)
 
     msize = ctx.axis_size("model")         # static (jax<0.5: no lax.axis_size)
+
+    if page_table is not None:
+        assert update and not window, "paged cache is full-attention decode"
+        poolspec = ctx.spec((None, "kv_seq", "kv_heads", None), ck.shape)
+        ptspec = P(bp, None)
+
+        def local_paged(q, kn, vn, pk, pv, pos, pt):
+            i = jax.lax.axis_index("model")
+            pk = _paged_write(pk, kn, pt, pos, i, msize)
+            pv = _paged_write(pv, vn, pt, pos, i, msize)
+            gk, gpos = _paged_gather(pk, pt, i, msize)
+            gv, _ = _paged_gather(pv, pt, i, msize)
+            valid = gpos[None] <= pos[:, None]             # (B, T·ps_loc)
+            s = jnp.einsum("bhgd,bshd->bhgs", q.astype(F32) * scale,
+                           gk.astype(F32))
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            s = jnp.where(valid[:, None, None], s, NEG)
+            m = jnp.max(s, -1)
+            m_safe = jnp.where(m <= NEG / 2, 0.0, m)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(valid[:, None, None], p, 0.0)
+            o = jnp.einsum("bhgs,bshd->bhgd", p, gv.astype(F32))
+            l = jnp.sum(p, -1)
+            return _combine(o, m, l).astype(q.dtype), pk, pv
+
+        fn = shard_map(local_paged, mesh=mesh,
+                       in_specs=(qspec, nspec, nspec, poolspec, poolspec,
+                                 pspec, ptspec),
+                       out_specs=(qspec, poolspec, poolspec), check_rep=False)
+        return fn(q, k_new, v_new, ck, cv, pos, page_table)
+
+    cspec = ctx.spec(("batch", "kv_seq", "kv_heads", None), ck.shape)
 
     def local(q, kn, vn, ck, cv, pos):
         i = jax.lax.axis_index("model")
@@ -108,15 +184,44 @@ def flash_decode_gqa(q, k_new, v_new, ck, cv, pos, *, window: int,
 
 
 def flash_decode_mla(q_eff, new_row, ckv, pos, *, kv_lora: int, scale: float,
-                     ctx: ShardCtx):
+                     ctx: ShardCtx, page_table=None):
     """q_eff (B,H,R); new_row (B,R); ckv (B,Sc,R). Key = cache row, value =
-    first kv_lora dims of the same row."""
+    first kv_lora dims of the same row. page_table → ckv is the shared pool
+    (num_pages, page_size, R) and the slot's pages are gathered in position
+    order (see flash_decode_gqa)."""
     mesh = ctx.mesh
     bp = ctx.spec(("batch", None, None), q_eff.shape)[0]
     qspec = P(bp, None, None)
     nspec = P(bp, None)
-    cspec = ctx.spec(("batch", "kv_seq", None), ckv.shape)
     pspec = P(bp)
+    msize = ctx.axis_size("model")
+
+    if page_table is not None:
+        poolspec = ctx.spec((None, "kv_seq", None), ckv.shape)
+        ptspec = P(bp, None)
+
+        def local_paged(q, row, pool, pos, pt):
+            i = jax.lax.axis_index("model")
+            pool = _paged_write(pool, row, pt, pos, i, msize)
+            g, gpos = _paged_gather(pool, pt, i, msize)
+            valid = gpos[None] <= pos[:, None]
+            s = jnp.einsum("bhr,bsr->bhs", q.astype(F32) * scale,
+                           g.astype(F32))
+            s = jnp.where(valid[:, None], s, NEG)
+            m = jnp.max(s, -1)
+            m_safe = jnp.where(m <= NEG / 2, 0.0, m)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(valid[:, None], p, 0.0)
+            o = jnp.einsum("bhs,bsr->bhr", p, g[..., :kv_lora].astype(F32))
+            l = jnp.sum(p, -1)
+            return _combine(o, m, l).astype(q.dtype), pool
+
+        fn = shard_map(local_paged, mesh=mesh,
+                       in_specs=(qspec, nspec, poolspec, pspec, ptspec),
+                       out_specs=(qspec, poolspec), check_rep=False)
+        return fn(q_eff, new_row, ckv, pos, page_table)
+
+    cspec = ctx.spec(("batch", "kv_seq", None), ckv.shape)
 
     def local(q, row, ckv, pos):
         i = jax.lax.axis_index("model")
@@ -145,7 +250,8 @@ def flash_decode_mla(q_eff, new_row, ckv, pos, *, kv_lora: int, scale: float,
 
 
 # --------------------------------------------------------- per-block decode
-def gqa_decode(cfg: ModelConfig, p, x, cache, pos, window, ctx: ShardCtx):
+def gqa_decode(cfg: ModelConfig, p, x, cache, pos, window, ctx: ShardCtx,
+               page_table=None):
     """x (B,D) → (out (B,D), new cache)."""
     B = x.shape[0]
     q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
@@ -159,14 +265,16 @@ def gqa_decode(cfg: ModelConfig, p, x, cache, pos, window, ctx: ShardCtx):
     qg = q.reshape(B, cfg.n_kv_heads, G, cfg.head_dim)
     out, ck, cv = flash_decode_gqa(
         qg, k, v, cache["k"], cache["v"], pos, window=window,
-        scale=cfg.head_dim ** -0.5, softcap=cfg.attn_softcap, ctx=ctx)
+        scale=cfg.head_dim ** -0.5, softcap=cfg.attn_softcap, ctx=ctx,
+        page_table=page_table)
     out = out.reshape(B, cfg.n_heads * cfg.head_dim)
     o = jnp.einsum("bk,kd->bd",
                    out, p["wo"].reshape(-1, cfg.d_model))
     return ctx.constrain(o, ("batch", None)), {"k": ck, "v": cv}
 
 
-def mla_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ShardCtx):
+def mla_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ShardCtx,
+               page_table=None):
     m = cfg.mla
     B = x.shape[0]
     x3 = x[:, None, :]
@@ -189,7 +297,8 @@ def mla_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ShardCtx):
     row = jnp.concatenate([ckv_t, kr_t], axis=-1).astype(cache["ckv"].dtype)
     scale = (m.nope_dim + m.rope_dim) ** -0.5
     o_c, ckv = flash_decode_mla(q_eff, row, cache["ckv"], pos,
-                                kv_lora=m.kv_lora, scale=scale, ctx=ctx)
+                                kv_lora=m.kv_lora, scale=scale, ctx=ctx,
+                                page_table=page_table)
     # un-absorb values: o = (o_c · W_uv) then output proj
     wuv = p["wukv"][..., m.nope_dim:]                  # (R, H, v)
     o = jnp.einsum("bhr,rhv->bhv", o_c, wuv)
@@ -197,14 +306,18 @@ def mla_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ShardCtx):
     return ctx.constrain(o, ("batch", None)), {"ckv": ckv}
 
 
-def block_decode(cfg: ModelConfig, bc, p, cache, h, pos, ctx: ShardCtx):
+def block_decode(cfg: ModelConfig, bc, p, cache, h, pos, ctx: ShardCtx,
+                 page_table=None):
     x = rmsnorm(h, p["norm1"], cfg.norm_eps)
     if bc.mixer == "attn":
+        # only full-attention layers are paged; rings keep dense buffers
+        pt = None if bc.window else page_table
         if cfg.mla:
-            y, new_cache = mla_decode(cfg, p["attn"], x, cache, pos, ctx)
+            y, new_cache = mla_decode(cfg, p["attn"], x, cache, pos, ctx,
+                                      page_table=pt)
         else:
             y, new_cache = gqa_decode(cfg, p["attn"], x, cache, pos,
-                                      bc.window, ctx)
+                                      bc.window, ctx, page_table=pt)
     else:
         step = (mamba_mod.mamba2_step if cfg.ssm.version == 2
                 else mamba_mod.mamba1_step)
@@ -225,8 +338,10 @@ def block_decode(cfg: ModelConfig, bc, p, cache, h, pos, ctx: ShardCtx):
 
 
 # ------------------------------------------------------------- decode step
-def decode_step(cfg: ModelConfig, params, cache, tokens, pos, ctx: ShardCtx):
-    """tokens (B,), pos (B,) → (logits (B,V) f32 vocab-sharded, new cache)."""
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, ctx: ShardCtx,
+                page_table=None):
+    """tokens (B,), pos (B,) → (logits (B,V) f32 vocab-sharded, new cache).
+    page_table (B,T) → full-attention cache leaves are page pools."""
     segments = layer_schedule(cfg)
     h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.pdtype)
     if cfg.embed_scale:
@@ -240,7 +355,8 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, ctx: ShardCtx):
             new_slot = {}
             for j, bc in enumerate(seg.pattern):
                 hc, nc = block_decode(cfg, bc, slot_params[f"s{j}"],
-                                      slot_cache[f"s{j}"], hc, pos, ctx)
+                                      slot_cache[f"s{j}"], hc, pos, ctx,
+                                      page_table=page_table)
                 new_slot[f"s{j}"] = nc
             return hc, new_slot
 
@@ -259,7 +375,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, ctx: ShardCtx):
 # ------------------------------------------------------ fused decode loop
 def decode_loop(cfg: ModelConfig, params, cache, tokens, pos, active,
                 remaining, ctx: ShardCtx, *, num_steps: int, eos_id: int,
-                max_len: int):
+                max_len: int, page_table=None):
     """Multi-token greedy decode fused into one device program.
 
     Wraps `decode_step` in a `jax.lax.scan` over a quantum of `num_steps`
@@ -282,7 +398,8 @@ def decode_loop(cfg: ModelConfig, params, cache, tokens, pos, active,
 
     def body(carry, _):
         cache, tokens, pos, active, remaining = carry
-        logits, cache = decode_step(cfg, params, cache, tokens, pos, ctx)
+        logits, cache = decode_step(cfg, params, cache, tokens, pos, ctx,
+                                    page_table=page_table)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         emit_tok = jnp.where(active, nxt, -1)
         remaining = remaining - active.astype(remaining.dtype)
@@ -298,13 +415,35 @@ def decode_loop(cfg: ModelConfig, params, cache, tokens, pos, active,
 
 
 def decode_loop_fn(cfg: ModelConfig, ctx: ShardCtx, *, num_steps: int,
-                   eos_id: int, max_len: int):
-    """Engine-facing closure, shaped for jit(donate_argnums=(1,2,3,4,5))."""
+                   eos_id: int, max_len: int, paged: bool = False):
+    """Engine-facing closure, shaped for jit(donate_argnums=(1,2,3,4,5)).
+
+    Returns (carry, packed) where `packed` is one (2·num_steps + 1, B) int32
+    array — emitted tokens, emission masks, then the post-quantum `active`
+    vector — so the engine's quantum costs exactly ONE blocking host fetch
+    (three separate fetches would sync the pipe three times). In paged mode
+    the loop takes the (B,T) page table as a trailing, non-donated arg."""
+
+    def _pack(carry, toks, msks):
+        active = carry[3]
+        return carry, jnp.concatenate(
+            [toks, msks.astype(jnp.int32), active[None].astype(jnp.int32)],
+            axis=0)
+
+    if paged:
+        def loop(params, cache, tokens, pos, active, remaining, page_table):
+            carry, toks, msks = decode_loop(
+                cfg, params, cache, tokens, pos, active, remaining, ctx,
+                num_steps=num_steps, eos_id=eos_id, max_len=max_len,
+                page_table=page_table)
+            return _pack(carry, toks, msks)
+        return loop
 
     def loop(params, cache, tokens, pos, active, remaining):
-        return decode_loop(cfg, params, cache, tokens, pos, active,
-                           remaining, ctx, num_steps=num_steps,
-                           eos_id=eos_id, max_len=max_len)
+        carry, toks, msks = decode_loop(
+            cfg, params, cache, tokens, pos, active, remaining, ctx,
+            num_steps=num_steps, eos_id=eos_id, max_len=max_len)
+        return _pack(carry, toks, msks)
 
     return loop
 

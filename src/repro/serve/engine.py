@@ -10,14 +10,22 @@ can't starve decode, and vice versa).
 
 Fast path (default; DESIGN.md §"Serving fast path"):
   * decode runs `decode_quantum` tokens per dispatch via a jitted
-    `lax.scan` with on-device argmax and per-slot done masking — one host
-    sync per quantum instead of one per token;
+    `lax.scan` with on-device argmax and per-slot done masking — exactly
+    one blocking host fetch per quantum (tokens, masks and the post-quantum
+    active vector come back as a single packed array);
   * the KV cache and (tokens, pos, active, remaining) state vectors stay
     resident on device and are *donated* through the decode loop, so a
     decode step updates the cache in place instead of allocating a new one;
   * prompts are padded to power-of-2 length buckets and prefilled batched
     (fixed batch `prefill_batch`), then inserted with a single gather-based
     scatter — one XLA compile per bucket, one dispatch per admitted group.
+
+Paged KV cache (`paged=True`; DESIGN.md §5 "Paged KV cache"): full-attention
+cache leaves live in a shared page pool `(num_pages, page_size, …)` indexed
+through a per-slot page table, with a host-side free-list allocator — pages
+are granted at admission, topped up ahead of each decode quantum, and
+recycled when a request completes, so short requests stop stranding
+max_len-sized cache rows. Ring and mamba layers keep their dense layouts.
 
 `fast=False` keeps the original per-token / per-prompt reference path; the
 benchmark (benchmarks/bench_serve.py) and the equivalence tests in
@@ -32,6 +40,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
 from repro.core.chunking import cpu_chunk
@@ -39,10 +48,35 @@ from repro.core.tracker import ThroughputTracker
 from repro.models.model import model_defs
 from repro.models.transformer import layer_schedule
 from repro.serve.decode import decode_loop_fn, decode_step
-from repro.serve.kv_cache import cache_defs
+from repro.serve.kv_cache import cache_defs, cache_kinds, paged_cache_defs
 from repro.serve.prefill import bucket_len, prefill
 from repro.sharding import params as prm
-from repro.sharding.axes import ShardCtx
+from repro.sharding.axes import ShardCtx, mesh_axis_size
+
+
+class PromptTooLongError(ValueError):
+    """Raised at submit() for prompts the engine can never schedule."""
+
+
+class EngineStallError(RuntimeError):
+    """run() made no progress for far longer than the workload warrants."""
+
+
+def worst_case_pages(prompt_len: int, max_new: int, decode_quantum: int,
+                     max_len: int, page_size: int) -> int:
+    """Worst-case pages a request can ever be granted: its context can reach
+    prompt+max_new-1, plus quantum-granularity slack for the frozen-slot
+    scribble positions, all capped at max_len. Shared with the benchmark's
+    pool sizing so the two can't drift."""
+    end = min(prompt_len + max_new - 1 + decode_quantum, max_len)
+    return max(1, -(-end // page_size))
+
+
+def _host_fetch(x) -> np.ndarray:
+    """Every device→host read on the fast path goes through here, so tests
+    can monkeypatch it as a fetch-count probe (one call per decode quantum,
+    one per admitted prefill group)."""
+    return np.asarray(x)
 
 
 @dataclass
@@ -62,11 +96,77 @@ def _jit_cache_size(fn) -> int:
         return -1
 
 
+class PageAllocator:
+    """Host-side free-list allocator over the shared KV page pool.
+
+    Page 0 is a reserved scratch ("trash") page: page-table rows of empty
+    slots point at it, so the masked scribbles of inactive decode rows can
+    never touch a live page. Admission reserves a worst-case page budget
+    (`commit`) per request up front; pages are physically handed out lazily
+    (`grow_to`) as the context crosses page boundaries. The invariant
+    `sum(committed - count) <= len(free)` makes every grow_to infallible —
+    pool pressure surfaces only as admission backpressure (`can_commit`).
+    """
+
+    def __init__(self, num_pages: int, max_slots: int, pages_per_slot: int):
+        if num_pages - 1 < pages_per_slot:
+            raise ValueError(
+                f"pool of {num_pages} pages (1 reserved) cannot hold one "
+                f"full {pages_per_slot}-page context")
+        self.num_pages = num_pages
+        self.free = list(range(num_pages - 1, 0, -1))   # pop() → low pages
+        self.table = np.zeros((max_slots, pages_per_slot), np.int32)
+        self.count = np.zeros(max_slots, np.int32)      # pages held per slot
+        self.committed = np.zeros(max_slots, np.int32)  # worst-case budget
+        self.min_free = len(self.free)                  # high-water telemetry
+        self.total_grants = 0                           # page reuse evidence
+
+    @property
+    def usable_pages(self) -> int:
+        return self.num_pages - 1
+
+    def outstanding(self) -> int:
+        """Pages promised to live slots but not yet handed out."""
+        return int((self.committed - self.count).sum())
+
+    def can_commit(self, n_pages: int) -> bool:
+        return len(self.free) - self.outstanding() >= n_pages
+
+    def commit(self, slot: int, n_pages: int) -> None:
+        if self.committed[slot] or self.count[slot]:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        if not self.can_commit(n_pages):
+            raise RuntimeError(
+                f"admitted past pool capacity ({n_pages} pages, "
+                f"{len(self.free)} free, {self.outstanding()} outstanding)")
+        self.committed[slot] = n_pages
+
+    def grow_to(self, slot: int, n_pages: int) -> None:
+        if n_pages > self.committed[slot]:
+            raise RuntimeError(
+                f"slot {slot}: grant of {n_pages} pages exceeds the "
+                f"committed budget {int(self.committed[slot])}")
+        while self.count[slot] < n_pages:
+            self.table[slot, self.count[slot]] = self.free.pop()
+            self.count[slot] += 1
+            self.total_grants += 1
+        self.min_free = min(self.min_free, len(self.free))
+
+    def release(self, slot: int) -> None:
+        for t in range(int(self.count[slot])):
+            self.free.append(int(self.table[slot, t]))
+        self.table[slot, :] = 0                         # back to trash page
+        self.count[slot] = 0
+        self.committed[slot] = 0
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ctx: ShardCtx, *,
                  max_slots: int = 4, max_len: int = 128, eos_id: int = -1,
                  decode_quantum: int = 8, prefill_batch: int | None = None,
-                 min_bucket: int = 16, fast: bool = True):
+                 min_bucket: int = 16, fast: bool = True,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: int | None = None):
         assert not cfg.enc_dec, "enc-dec serving uses whisper_decode_step"
         self.cfg, self.params, self.ctx = cfg, params, ctx
         self.max_slots, self.max_len, self.eos_id = max_slots, max_len, eos_id
@@ -80,8 +180,52 @@ class Engine:
                             for seg in layer_schedule(cfg)
                             for bc in seg.pattern)
         msize = ctx.axis_size("model")
-        self.cache = prm.materialize(
-            cache_defs(cfg, max_slots, max_len, msize), jax.random.PRNGKey(0))
+        self.paged = bool(paged)
+        cache_d = None
+        if self.paged:
+            if not fast:
+                raise ValueError("paged KV cache requires fast=True")
+            if mesh_axis_size(ctx.mesh, ("pod", "data")) > 1:
+                # pool leaves are replicated over the batch axes but written
+                # per-slot under check_rep=False — replicas would silently
+                # diverge; data-parallel paged pools are a ROADMAP follow-on
+                raise ValueError("paged KV cache requires an unsharded "
+                                 "batch axis (data/pod mesh size 1)")
+            if page_size <= 0 or page_size % msize:
+                raise ValueError(
+                    f"page_size {page_size} must be a positive multiple of "
+                    f"the model-axis size {msize}")
+            if max_len % page_size:
+                raise ValueError(
+                    f"max_len {max_len} must be a multiple of page_size "
+                    f"{page_size}")
+            self.page_size = page_size
+            self.pages_per_slot = max_len // page_size
+            self.num_pages = num_pages or 1 + max_slots * self.pages_per_slot
+            self.alloc = PageAllocator(self.num_pages, max_slots,
+                                       self.pages_per_slot)
+            cache_d = paged_cache_defs(cfg, max_slots, max_len, msize,
+                                       num_pages=self.num_pages,
+                                       page_size=page_size)
+            self.page_table_dev = jnp.asarray(self.alloc.table)
+            self._table_dirty = False
+            self.pos_host = np.zeros(max_slots, np.int64)  # device-pos mirror
+        else:
+            cache_d = cache_defs(cfg, max_slots, max_len, msize)
+        # place the cache on the mesh up front: the donated decode loop
+        # emits mesh-sharded leaves, and a fresh SingleDeviceSharding cache
+        # would make every admit bucket compile twice (once per sharding).
+        # single-device meshes get the replicated spec the loop actually
+        # emits; real meshes get the defs' kv_seq shardings (replicating a
+        # pool across the model axis would forfeit the HBM the pool saves)
+        self.cache = prm.materialize(cache_d, jax.random.PRNGKey(0))
+        if ctx.mesh.size == 1:
+            self.cache = jax.device_put(
+                self.cache, NamedSharding(ctx.mesh, PartitionSpec()))
+        else:
+            self.cache = jax.tree.map(jax.device_put, self.cache,
+                                      prm.shardings(cache_d, ctx))
+        self.kinds = cache_kinds(cfg, paged=self.paged)
         self.pos = np.zeros(max_slots, np.int32)       # legacy-path mirror
         self.slot_req: list[Optional[Request]] = [None] * max_slots
         self.pending: list[Request] = []
@@ -89,11 +233,16 @@ class Engine:
             {"decode": "accelerator", "prefill": "core"}, f0=2.0)
         self.cycle_log: list[dict] = []                # per-cycle balance
         self._last_admitted = 0
-        # device-resident decode state (fast path)
-        self.tokens_dev = jnp.zeros(max_slots, jnp.int32)
-        self.pos_dev = jnp.zeros(max_slots, jnp.int32)
-        self.active_dev = jnp.zeros(max_slots, bool)
-        self.remaining_dev = jnp.zeros(max_slots, jnp.int32)
+        self.quanta = 0                                # decode dispatches
+        self.prefill_groups = 0                        # prefill dispatches
+        # device-resident decode state (fast path), mesh-placed like cache
+        repl = NamedSharding(ctx.mesh, PartitionSpec())
+        self.tokens_dev = jax.device_put(jnp.zeros(max_slots, jnp.int32),
+                                         repl)
+        self.pos_dev = jax.device_put(jnp.zeros(max_slots, jnp.int32), repl)
+        self.active_dev = jax.device_put(jnp.zeros(max_slots, bool), repl)
+        self.remaining_dev = jax.device_put(jnp.zeros(max_slots, jnp.int32),
+                                            repl)
         # ---- jitted cells -------------------------------------------------
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos, ctx))
@@ -102,11 +251,12 @@ class Engine:
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._decode_loop = jax.jit(
             decode_loop_fn(cfg, ctx, num_steps=self.decode_quantum,
-                           eos_id=eos_id, max_len=max_len),
+                           eos_id=eos_id, max_len=max_len, paged=self.paged),
             donate_argnums=(1, 2, 3, 4, 5))
         self._prefill_fast = jax.jit(self._prefill_fast_impl)
-        self._admit = jax.jit(self._admit_impl,
-                              donate_argnums=(0, 1, 2, 3, 4))
+        self._admit = jax.jit(
+            self._admit_paged_impl if self.paged else self._admit_impl,
+            donate_argnums=(0, 1, 2, 3, 4))
 
     # ---- cache slot insertion (jitted scatter on the batch dim) ----------
     def _insert_impl(self, cache, one_cache, slot):
@@ -121,8 +271,30 @@ class Engine:
         """(P,Sb) padded prompts → (first greedy token (P,), batched cache).
         Argmax happens on device so admission never ships logits home."""
         logits, cache = prefill(self.cfg, params, toks, self.ctx,
-                                max_len=self.max_len, prompt_len=prompt_len)
+                                max_len=self.max_len, prompt_len=prompt_len,
+                                page_size=(self.page_size if self.paged
+                                           else None))
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    def _admit_state(self, tokens, pos, active, remaining, hit, idx,
+                     first, prompt_len, max_new):
+        """Blend the prefilled rows' scalar state into the slot vectors."""
+        pl = jnp.take(prompt_len, idx)
+        rem = jnp.take(max_new, idx) - 1       # prefill already emitted one
+        tokens = jnp.where(hit, jnp.take(first, idx), tokens)
+        pos = jnp.where(hit, pl, pos)
+        remaining = jnp.where(hit, rem, remaining)
+        # pl == max_len-1 still gets one decode step (writes the last cache
+        # slot) — matches the legacy path's post-step done check
+        active = jnp.where(hit, (rem > 0) & (pl < self.max_len), active)
+        return tokens, pos, active, remaining
+
+    def _admit_sel(self, slots, valid):
+        """slot-targeting mask/index pair for the gather-formulated scatter:
+        for each engine slot s, the (at most one) prefill row targeting s."""
+        S = self.max_slots
+        sel = valid[None, :] & (slots[None, :] == jnp.arange(S)[:, None])
+        return sel.any(axis=1), jnp.argmax(sel, axis=1)
 
     def _admit_impl(self, cache, tokens, pos, active, remaining, new_cache,
                     first, prompt_len, max_new, slots, valid):
@@ -133,9 +305,7 @@ class Engine:
         blend it into every cache leaf / state vector.
         """
         S = self.max_slots
-        sel = valid[None, :] & (slots[None, :] == jnp.arange(S)[:, None])
-        hit = sel.any(axis=1)                  # (S,) slot receives a row?
-        idx = jnp.argmax(sel, axis=1)          # (S,) which prefill row
+        hit, idx = self._admit_sel(slots, valid)
 
         def ins(c, o):
             g = jnp.take(o, idx, axis=1)       # (repeat, S, …)
@@ -143,18 +313,48 @@ class Engine:
             return jnp.where(m, g.astype(c.dtype), c)
 
         cache = jax.tree.map(ins, cache, new_cache)
-        pl = jnp.take(prompt_len, idx)
-        rem = jnp.take(max_new, idx) - 1       # prefill already emitted one
-        tokens = jnp.where(hit, jnp.take(first, idx), tokens)
-        pos = jnp.where(hit, pl, pos)
-        remaining = jnp.where(hit, rem, remaining)
-        # pl == max_len-1 still gets one decode step (writes the last cache
-        # slot) — matches the legacy path's post-step done check
-        active = jnp.where(hit, (rem > 0) & (pl < self.max_len), active)
-        return cache, tokens, pos, active, remaining
+        return (cache,) + self._admit_state(tokens, pos, active, remaining,
+                                            hit, idx, first, prompt_len,
+                                            max_new)
+
+    def _admit_paged_impl(self, cache, tokens, pos, active, remaining,
+                          new_cache, first, prompt_len, max_new, slots,
+                          valid, page_src):
+        """Paged admit: dense leaves (rings, mamba state) blend per slot as
+        in `_admit_impl`; pool leaves scatter the bucket-sized prefill rows
+        into their freshly allocated pages. `page_src` (num_pages,) int32 is
+        host-computed: flat (row · pages_per_row + page) source index for
+        each pool page, or -1 for pages this group doesn't touch."""
+        S = self.max_slots
+        hit, idx = self._admit_sel(slots, valid)
+
+        def ins(kind, c, o):
+            if kind == "paged":
+                # c (repeat, N, ps, …) pool; o (repeat, P, Tb·ps, …) rows
+                ps, N = c.shape[2], c.shape[1]
+                rep, Pb = o.shape[0], o.shape[1]
+                Tb = o.shape[2] // ps
+                src = o.reshape((rep, Pb * Tb, ps) + o.shape[3:])
+                g = jnp.take(src, jnp.clip(page_src, 0, Pb * Tb - 1), axis=1)
+                m = (page_src >= 0).reshape((1, N) + (1,) * (c.ndim - 2))
+                return jnp.where(m, g.astype(c.dtype), c)
+            g = jnp.take(o, idx, axis=1)       # (repeat, S, …)
+            m = hit.reshape((1, S) + (1,) * (c.ndim - 2))
+            return jnp.where(m, g.astype(c.dtype), c)
+
+        cache = jax.tree.map(ins, self.kinds, cache, new_cache)
+        return (cache,) + self._admit_state(tokens, pos, active, remaining,
+                                            hit, idx, first, prompt_len,
+                                            max_new)
 
     def submit(self, req: Request) -> None:
-        assert len(req.prompt) < self.max_len, (len(req.prompt), self.max_len)
+        n = len(req.prompt)
+        if n == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if n >= self.max_len:
+            raise PromptTooLongError(
+                f"request {req.rid}: prompt of {n} tokens needs at least "
+                f"one decode slot; engine max_len is {self.max_len}")
         self.pending.append(req)
 
     def free_slots(self) -> list[int]:
@@ -164,6 +364,36 @@ class Engine:
         """Distinct prefill compiles so far (fast: one per length bucket)."""
         return _jit_cache_size(self._prefill_fast if self.fast
                                else self._prefill)
+
+    def reserved_cache_bytes(self) -> int:
+        """Persistently reserved KV-cache HBM (pool + dense leaves)."""
+        return sum(int(x.nbytes) for x in jax.tree.leaves(self.cache))
+
+    # ---- paged-pool bookkeeping ------------------------------------------
+    def _worst_pages(self, req: Request) -> int:
+        return worst_case_pages(len(req.prompt), req.max_new,
+                                self.decode_quantum, self.max_len,
+                                self.page_size)
+
+    def _grant_quantum_pages(self, active_slots: list[int]) -> None:
+        """Pre-grant every occupied slot enough pages to cover the coming
+        quantum, so the decode loop never needs a device-side allocator."""
+        for i in active_slots:
+            end = min(int(self.pos_host[i]) + self.decode_quantum,
+                      self.max_len)
+            target = -(-end // self.page_size)
+            if target > self.alloc.count[i]:
+                self.alloc.grow_to(i, target)
+                self._table_dirty = True
+
+    def _release_slot_pages(self, slot: int) -> None:
+        self.alloc.release(slot)
+        self._table_dirty = True
+
+    def _push_page_table(self) -> None:
+        if self._table_dirty:
+            self.page_table_dev = jnp.asarray(self.alloc.table)
+            self._table_dirty = False
 
     # ---- one engine cycle -------------------------------------------------
     def step(self) -> None:
@@ -182,20 +412,36 @@ class Engine:
                                        "decoded": 0,
                                        "f": self.tracker.f()})
             return
+        if self.paged:
+            self._grant_quantum_pages(active_slots)
+            self._push_page_table()
         t0 = time.perf_counter()
-        carry, toks, msks = self._decode_loop(
-            self.params, self.cache, self.tokens_dev, self.pos_dev,
-            self.active_dev, self.remaining_dev)
+        n0 = _jit_cache_size(self._decode_loop)
+        args = (self.params, self.cache, self.tokens_dev, self.pos_dev,
+                self.active_dev, self.remaining_dev)
+        if self.paged:
+            carry, packed = self._decode_loop(*args, self.page_table_dev)
+        else:
+            carry, packed = self._decode_loop(*args)
         (self.cache, self.tokens_dev, self.pos_dev, self.active_dev,
          self.remaining_dev) = carry
-        toks_h = np.asarray(toks)              # ONE host sync per quantum
-        msks_h = np.asarray(msks)
-        act_h = np.asarray(self.active_dev)
+        packed_h = _host_fetch(packed)         # the ONE host sync per quantum
         dt = time.perf_counter() - t0
+        self.quanta += 1
+        N = self.decode_quantum
+        toks_h = packed_h[:N]
+        msks_h = packed_h[N:2 * N].astype(bool)
+        act_h = packed_h[2 * N].astype(bool)
         emitted = int(msks_h.sum())
-        if emitted:
+        # quanta that just compiled don't measure decode speed — feeding
+        # them to the tracker skews the admission f-ratio for many cycles
+        # (probe unavailable (-1) → record everything: a slightly skewed f
+        # beats a tracker frozen at its prior)
+        if emitted and (n0 < 0 or _jit_cache_size(self._decode_loop) == n0):
             self.tracker.record("decode", emitted, dt)
-        for q in range(self.decode_quantum):
+        if self.paged:
+            self.pos_host += msks_h.sum(axis=0)
+        for q in range(N):
             row = msks_h[q]
             for i in active_slots:
                 if row[i]:
@@ -204,21 +450,32 @@ class Engine:
             if not act_h[i]:
                 self.slot_req[i].done = True
                 self.slot_req[i] = None
+                if self.paged:
+                    self._release_slot_pages(i)
         self.cycle_log.append({"admitted": self._last_admitted,
                                "decoded": emitted, "f": self.tracker.f()})
 
     def _admit_pending(self, free: list[int]) -> None:
         """HBB chunking law over token units: the decode quantum is the
         fixed accelerator chunk (S_f = quantum × slots tokens); the prompt-
-        token budget admitted this cycle is the adaptive S_c side."""
+        token budget admitted this cycle is the adaptive S_c side. Paged
+        engines additionally stop at the pool's worst-case page budget
+        (admission backpressure instead of a mid-quantum page fault)."""
         r_tokens = sum(len(q.prompt) for q in self.pending)
         budget = cpu_chunk(S_f=self.decode_quantum * self.max_slots,
                            f=self.tracker.f(), r=r_tokens, n_cores=1)
         take: list[Request] = []
+        planned_pages = 0
         while self.pending and len(take) < len(free):
-            n = len(self.pending[0].prompt)
+            req = self.pending[0]
+            n = len(req.prompt)
             if take and budget < n:            # always admit ≥ 1
                 break
+            if self.paged:
+                W = self._worst_pages(req)
+                if not self.alloc.can_commit(planned_pages + W):
+                    break                      # pool backpressure
+                planned_pages += W
             budget -= n
             take.append(self.pending.pop(0))
         if not take:
@@ -230,18 +487,26 @@ class Engine:
                             max_bucket=self.max_len)
                  if self.pad_safe else len(req.prompt))
             groups.setdefault(b, []).append(req)
-        t0 = time.perf_counter()
         ptoks = 0
+        pdt = 0.0
         for Sb in sorted(groups):
             grp = groups[Sb]
             for k0 in range(0, len(grp), self.prefill_batch):
                 chunk = grp[k0:k0 + self.prefill_batch]
-                self._prefill_group(Sb, chunk, free)
-                ptoks += sum(len(q.prompt) for q in chunk)
-        self.tracker.record("prefill", ptoks, time.perf_counter() - t0)
+                dt, warm = self._prefill_group(Sb, chunk, free)
+                if warm:                       # skip compile-tainted samples
+                    pdt += dt
+                    ptoks += sum(len(q.prompt) for q in chunk)
+        # device interval only: host-side packing and the first-token fetch
+        # used to ride along and skewed the admission f-ratio low
+        if ptoks:
+            self.tracker.record("prefill", ptoks, pdt)
 
     def _prefill_group(self, Sb: int, reqs: list[Request],
-                       free: list[int]) -> None:
+                       free: list[int]) -> tuple[float, bool]:
+        """Prefill + admit one bucket group; returns (device seconds for the
+        prefill dispatch + admit scatter, blocked-until-ready; whether the
+        interval is compile-free and thus safe to feed the f-tracker)."""
         # fixed batch for padded buckets (one compile per bucket); smallest
         # power-of-2 batch for exact-length (mamba) groups
         P = (self.prefill_batch if self.pad_safe
@@ -257,21 +522,59 @@ class Engine:
             mn[j] = req.max_new
             valid[j] = True
             slots[j] = free.pop(0)
+        extra = ()
+        if self.paged:
+            # step() pushes the updated table to device before the next
+            # decode quantum; the admit scatter itself reads page_src only
+            extra = (jnp.asarray(self._alloc_group_pages(Sb, reqs, slots)),)
+        t0 = time.perf_counter()
+        p0 = _jit_cache_size(self._prefill_fast)
+        a0 = _jit_cache_size(self._admit)
         first, new_cache = self._prefill_fast(self.params, jnp.asarray(toks),
                                               jnp.asarray(pl))
         (self.cache, self.tokens_dev, self.pos_dev, self.active_dev,
          self.remaining_dev) = self._admit(
             self.cache, self.tokens_dev, self.pos_dev, self.active_dev,
             self.remaining_dev, new_cache, first, jnp.asarray(pl),
-            jnp.asarray(mn), jnp.asarray(slots), jnp.asarray(valid))
-        first_h = np.asarray(first)            # one sync per admitted group
+            jnp.asarray(mn), jnp.asarray(slots), jnp.asarray(valid), *extra)
+        jax.block_until_ready((first, self.tokens_dev))
+        dt = time.perf_counter() - t0
+        # probe unavailable (-1 sentinel) → treat as warm and record
+        warm = (p0 < 0 or a0 < 0
+                or (_jit_cache_size(self._prefill_fast) == p0
+                    and _jit_cache_size(self._admit) == a0))
+        self.prefill_groups += 1
+        first_h = _host_fetch(first)           # one sync per admitted group
         for j, req in enumerate(reqs):
             req.out.append(int(first_h[j]))
             if req.max_new <= 1:
                 req.done = True                # budget spent at prefill
                 free.insert(0, int(slots[j]))
+                if self.paged:
+                    self._release_slot_pages(int(slots[j]))
             else:
                 self.slot_req[int(slots[j])] = req
+                if self.paged:
+                    self.pos_host[int(slots[j])] = len(req.prompt)
+        return dt, warm
+
+    def _alloc_group_pages(self, Sb: int, reqs: list[Request],
+                           slots: np.ndarray) -> np.ndarray:
+        """Commit each request's worst-case page budget, hand out the pages
+        its prompt needs now, and build the pool-page → prefill-row source
+        map the paged admit scatter consumes."""
+        ps = self.page_size
+        Tb = -(-Sb // ps)                      # pages per bucket row
+        page_src = np.full(self.num_pages, -1, np.int32)
+        for j, req in enumerate(reqs):
+            slot = int(slots[j])
+            self.alloc.commit(slot, self._worst_pages(req))
+            need = -(-len(req.prompt) // ps)
+            self.alloc.grow_to(slot, need)
+            self._table_dirty = True
+            for t in range(need):
+                page_src[self.alloc.table[slot, t]] = j * Tb + t
+        return page_src
 
     # ---- reference slow path (pre-fast-path engine, kept for baselines) --
     def _step_legacy(self) -> None:
@@ -323,11 +626,27 @@ class Engine:
         self.cycle_log.append({"admitted": admitted, "decoded": len(active),
                                "f": self.tracker.f()})
 
+    def _guard_limit(self) -> int:
+        """Cycle budget proportional to outstanding work: every request
+        needs ≲ 1 admission cycle plus max_new/quantum decode cycles; 8× is
+        generous slack for admission backpressure and scheduler warm-up."""
+        quantum = self.decode_quantum if self.fast else 1
+        reqs = self.pending + [r for r in self.slot_req if r is not None]
+        tokens = sum(max(1, r.max_new) for r in reqs)
+        return 64 + 8 * (len(reqs) + -(-tokens // quantum))
+
     def run(self, requests: list[Request]) -> list[Request]:
         for r in requests:
             self.submit(r)
-        guard = 0
-        while (self.pending or any(self.slot_req)) and guard < 10_000:
+        guard, limit = 0, self._guard_limit()
+        while self.pending or any(s is not None for s in self.slot_req):
+            if guard >= limit:
+                undone = sum(1 for r in requests if not r.done)
+                raise EngineStallError(
+                    f"no forward progress after {guard} cycles "
+                    f"(limit {limit}): {len(self.pending)} pending, "
+                    f"{undone} unfinished requests — engine scheduling bug "
+                    f"or pool/slot starvation")
             self.step()
             guard += 1
         return requests

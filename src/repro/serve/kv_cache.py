@@ -12,6 +12,15 @@ The serving fast path (DESIGN.md §5) depends on these defs being sized by
 the engine's `max_len` only — never by prompt length — so every prefill
 bucket produces identically-shaped cache leaves and the engine's batched
 insert / donated decode loop stay shape-stable across buckets.
+
+Paged layout (DESIGN.md §5 "Paged KV cache"): full-attention leaves trade
+the dense per-slot `(max_slots, S_c, …)` rows for a shared page pool
+`(num_pages, page_size, …)` addressed through a per-slot page table held by
+the engine; a slot only occupies the pages its context actually needs.
+Ring (sliding-window) and mamba leaves keep their dense / O(1) layouts —
+they are already bounded per slot. The in-page offset dim carries the
+`kv_seq` logical axis, so each model shard owns a fixed sub-range of every
+page and the flash-decode exact-softmax combine is unchanged.
 """
 from __future__ import annotations
 
@@ -66,6 +75,64 @@ def cache_defs(cfg: ModelConfig, batch: int, seq_len: int, msize: int):
     return {"blocks": segs}
 
 
+# --------------------------------------------------------------- paged pool
+def _is_pooled(bc: BlockCfg) -> bool:
+    """Full-attention mixers go through the page pool; ring (sliding-window)
+    and mamba layers keep their dense / O(1) per-slot layouts."""
+    return bc.mixer == "attn" and not bc.window
+
+
+def page_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Pool leaves for one full-attention layer: (num_pages, page_size, …).
+    The in-page offset carries `kv_seq` so each model shard owns offsets
+    [i·ps/m, (i+1)·ps/m) of every page (requires page_size % msize == 0)."""
+    if cfg.mla:
+        R = cfg.mla.kv_lora + cfg.mla.rope_dim
+        return {"ckv": pd((num_pages, page_size, R),
+                          (None, "kv_seq", None), init="zeros",
+                          dtype=cfg.pdtype)}
+    return {
+        "k": pd((num_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+                (None, "kv_seq", "kv_heads", None), init="zeros",
+                dtype=cfg.pdtype),
+        "v": pd((num_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+                (None, "kv_seq", "kv_heads", None), init="zeros",
+                dtype=cfg.pdtype),
+    }
+
+
+def paged_cache_defs(cfg: ModelConfig, batch: int, seq_len: int, msize: int,
+                     *, num_pages: int, page_size: int):
+    """Decode-cache defs with full-attention leaves replaced by page pools.
+    `batch`/`seq_len` still size the dense ring / mamba leaves."""
+    assert not cfg.enc_dec, "paged cache is decoder-only"
+    assert page_size % msize == 0, (page_size, msize)
+    segs = []
+    for seg in layer_schedule(cfg):
+        slot = {f"s{j}": (page_pool_defs(cfg, num_pages, page_size)
+                          if _is_pooled(bc)
+                          else block_cache_defs(cfg, bc, batch, seq_len,
+                                                msize))
+                for j, bc in enumerate(seg.pattern)}
+        segs.append(prm.stack(slot, seg.repeat))
+    return {"blocks": segs}
+
+
+def cache_kinds(cfg: ModelConfig, *, paged: bool):
+    """Per-leaf layout labels ("paged" | "dense"), structured exactly like
+    the cache tree so the engine can jax.tree.map over (kinds, cache, new)."""
+    segs = []
+    for seg in layer_schedule(cfg):
+        slot = {}
+        for j, bc in enumerate(seg.pattern):
+            kind = "paged" if paged and _is_pooled(bc) else "dense"
+            # dummy sizes: only the tree *structure* matters here
+            defs = block_cache_defs(cfg, bc, 1, 1, 1)
+            slot[f"s{j}"] = prm.tree_map(lambda d, kind=kind: kind, defs)
+        segs.append(slot)
+    return {"blocks": segs}
+
+
 def encdec_cache_defs(cfg: ModelConfig, batch: int, enc_len: int, msize: int):
     """Whisper: per-decoder-layer self cache + cross KV over encoder frames."""
     Sd = -(-cfg.max_decoder_len // msize) * msize
@@ -90,3 +157,15 @@ def encdec_cache_defs(cfg: ModelConfig, batch: int, enc_len: int, msize: int):
 def cache_bytes(cfg: ModelConfig, batch: int, seq_len: int,
                 msize: int) -> int:
     return prm.param_bytes(cache_defs(cfg, batch, seq_len, msize))
+
+
+def page_bytes(cfg: ModelConfig, page_size: int) -> int:
+    """Bytes one page occupies across every pooled layer (HBM granularity
+    of the allocator)."""
+    total = 0
+    for seg in layer_schedule(cfg):
+        for bc in seg.pattern:
+            if _is_pooled(bc):
+                total += seg.repeat * prm.param_bytes(
+                    page_pool_defs(cfg, 1, page_size))
+    return total

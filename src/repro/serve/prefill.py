@@ -61,7 +61,9 @@ def bucket_len(n: int, *, min_bucket: int = 16,
     b = max(min_bucket, 1 << (max(int(n), 1) - 1).bit_length())
     if max_bucket is not None:
         b = min(b, max_bucket)
-    assert b >= n, (n, b, max_bucket)
+    if b < n:   # typed, not assert: Engine.submit surfaces this upstream
+        raise ValueError(
+            f"prompt of {n} tokens exceeds the {max_bucket}-token cap")
     return b
 
 
@@ -149,11 +151,17 @@ def mla_prefill(cfg: ModelConfig, p, x, ctx: ShardCtx, *, positions,
 
 def block_prefill(cfg: ModelConfig, bc: BlockCfg, p, h, ctx: ShardCtx,
                   positions, seq_len: int, max_len: int | None = None,
-                  prompt_len=None):
+                  prompt_len=None, page_size: int | None = None):
     msize = ctx.axis_size("model")
     x = rmsnorm(h, p["norm1"], cfg.norm_eps)
     if bc.mixer == "attn":
-        Sc = attn_cache_len(cfg, bc.window, max_len or seq_len, msize)
+        if page_size and not bc.window:
+            # paged engine: full-attention caches are sized by the *bucket*
+            # (rounded up to whole pages) — the admit scatter moves them
+            # into pool pages, so no max_len-row is ever materialized
+            Sc = -(-seq_len // page_size) * page_size
+        else:
+            Sc = attn_cache_len(cfg, bc.window, max_len or seq_len, msize)
         if cfg.mla:
             y, cache = mla_prefill(cfg, p["attn"], x, ctx, positions=positions,
                                    seq_len_cache=Sc)
@@ -182,7 +190,7 @@ def block_prefill(cfg: ModelConfig, bc: BlockCfg, p, h, ctx: ShardCtx,
 
 def prefill(cfg: ModelConfig, params, tokens, ctx: ShardCtx,
             frontend_embed=None, max_len: int | None = None,
-            prompt_len=None):
+            prompt_len=None, page_size: int | None = None):
     """tokens (B,S) → (last-token logits (B,V), cache). The lowered
     `prefill_32k` dry-run cell. `max_len` sizes the cache for further
     decoding (engine use); default = S (dry-run cell).
@@ -192,6 +200,11 @@ def prefill(cfg: ModelConfig, params, tokens, ctx: ShardCtx,
     prompt_len-1 per row. Only valid for attention-mixer models — mamba
     state scans would absorb the pad tokens (the engine falls back to
     exact-length prefill there).
+
+    `page_size` (paged engine): full-attention cache leaves come out sized
+    `(B, ceil(S / page_size) · page_size, …)` — bucket-sized page-aligned
+    rows the engine scatters into its shared pool — instead of max_len rows.
+    Ring and mamba leaves are unaffected.
     """
     segments = layer_schedule(cfg)
     S = tokens.shape[1]
@@ -205,7 +218,8 @@ def prefill(cfg: ModelConfig, params, tokens, ctx: ShardCtx,
             for j, bc in enumerate(seg.pattern):
                 hc, c = block_prefill(cfg, bc, slot_params[f"s{j}"], hc, ctx,
                                       positions, S, max_len,
-                                      prompt_len=prompt_len)
+                                      prompt_len=prompt_len,
+                                      page_size=page_size)
                 caches[f"s{j}"] = c
             return hc, caches
 

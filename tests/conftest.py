@@ -6,6 +6,13 @@ import pytest
 
 from repro.sharding.axes import single_device_ctx
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy system / arch-smoke tests — excluded from the tier-1 "
+        "CI job (-m 'not slow'); a separate non-blocking job runs them")
+
 try:
     import hypothesis  # noqa: F401
 except ModuleNotFoundError:

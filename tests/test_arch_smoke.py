@@ -9,6 +9,8 @@ from repro.configs import all_configs, smoke_config
 from repro.models.model import loss_fn, model_defs, synth_batch
 from repro.sharding import params as prm
 
+pytestmark = pytest.mark.slow
+
 ARCHS = sorted(all_configs())
 
 

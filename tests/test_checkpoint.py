@@ -63,6 +63,7 @@ def test_async_save(tmp_path, key):
     assert ckpt.available_steps(str(tmp_path)) == [3]
 
 
+@pytest.mark.slow
 def test_loop_restarts_from_checkpoint(tmp_path, ctx):
     cfg = smoke_config(all_configs()["h2o-danube-1.8b"])
     ocfg = OptConfig(lr=1e-3, warmup_steps=2, decay_steps=40)
@@ -80,6 +81,7 @@ def test_loop_restarts_from_checkpoint(tmp_path, ctx):
     assert steps.count(5) == 2 or steps.count(6) >= 1
 
 
+@pytest.mark.slow
 def test_loop_gives_up_after_max_restarts(tmp_path, ctx):
     cfg = smoke_config(all_configs()["h2o-danube-1.8b"])
     lcfg = LoopConfig(total_steps=8, ckpt_every=100, ckpt_dir=str(tmp_path),

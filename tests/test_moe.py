@@ -91,6 +91,7 @@ def test_aux_stats_are_distributions(ctx, key):
     assert float(aux) >= cfg.moe.aux_weight * 0.9
 
 
+@pytest.mark.slow
 def test_moe_grads_flow(ctx, key):
     cfg = _cfg()
     p = prm.materialize(moe_defs(cfg), key)

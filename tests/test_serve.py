@@ -157,10 +157,14 @@ def test_quantum_decode_equivalence(ctx):
     assert np.array_equal(np.array(rem), budget)
 
 
-def test_engine_fast_matches_legacy(ctx):
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_fast_matches_legacy(ctx, paged):
     """Same workload through the fast path and the reference path produces
-    identical streams; fast prefill compiles once per bucket."""
-    cfg = smoke_config(all_configs()["h2o-danube-1.8b"])
+    identical streams; fast prefill compiles once per bucket. With
+    paged=True the fast engine serves from the shared page pool (on a
+    full-attention arch, so the pool is actually exercised)."""
+    arch = "mistral-nemo-12b" if paged else "h2o-danube-1.8b"
+    cfg = smoke_config(all_configs()[arch])
     rng = np.random.default_rng(3)
     lens = [4, 5, 9, 17, 18, 23, 63]        # buckets: 16, 32, 64;
     prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in lens]
@@ -168,8 +172,9 @@ def test_engine_fast_matches_legacy(ctx):
     # step remains — the boundary where fast/legacy done-checks must agree
 
     def serve(fast):
+        kw = dict(paged=True, page_size=8) if paged and fast else {}
         eng = make_engine(cfg, ctx, max_slots=3, max_len=64, fast=fast,
-                          decode_quantum=4)
+                          decode_quantum=4, **kw)
         # max_new=1 finishes at prefill — both paths must stop there
         reqs = [Request(rid=i, prompt=p, max_new=1 if i == 1 else 6)
                 for i, p in enumerate(prompts)]

@@ -3,6 +3,7 @@ structure, loss-fn internals (chunked CE ≡ direct CE), rope properties."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import all_configs, smoke_config
@@ -16,6 +17,7 @@ from repro.train.loop import LoopConfig, train_loop
 from repro.train.optimizer import OptConfig
 
 
+@pytest.mark.slow
 def test_end_to_end_training_learns(tmp_path, ctx):
     """Few hundred steps on the copy-structured stream: loss must drop well
     below the unigram entropy (the model exploits the copy pattern)."""
