@@ -19,6 +19,15 @@ recompiles per length):
 The paged-vs-dense comparison runs on a full-attention arch (mistral-nemo)
 — sliding-window archs keep their O(window) rings and would not exercise
 the pool.
+
+PR 3 adds the paged-*kernel* comparison (BENCH_2.json): the same paged
+workload through the in-kernel page-table walk (`paged_kernel=True` — on
+CPU smoke this is the XLA-fused blockwise reference of the kernel
+contract, attending only the live page prefix; on TPU the Pallas kernel)
+vs. the PR 2 jnp gathered-view path, on an engine provisioned for long
+contexts (`KERNEL_MAX_LEN`), where the gather path pays O(max_len) per
+token and the kernel path pays O(context). Plus a long-context row — a
+request whose context cannot fit the dense engine's 64-token rows at all.
 """
 from __future__ import annotations
 
@@ -31,52 +40,69 @@ import numpy as np
 MAX_SLOTS = 4
 MAX_LEN = 64
 PAGE_SIZE = 8
+# the kernel-vs-gather rows run on a long-context-provisioned engine: the
+# table is 1024/8 = 128 pages wide while the workload's contexts stay small
+KERNEL_MAX_LEN = 1024
+LONG_PROMPT = 400
+LONG_MAX_NEW = 40
 
 
-def _workload(cfg, n_requests: int, max_new: int, seed: int = 0):
+def _workload(cfg, n_requests: int, max_new: int, seed: int = 0,
+              lens: list[int] | None = None):
     rng = np.random.default_rng(seed)
-    # many distinct lengths across two power-of-2 buckets (≤16, ≤32)
-    lens = [int(x) for x in rng.integers(4, 31, n_requests)]
+    if lens is None:
+        # many distinct lengths across two power-of-2 buckets (≤16, ≤32)
+        lens = [int(x) for x in rng.integers(4, 31, n_requests)]
     return [(i, rng.integers(0, cfg.vocab, n).tolist()) for i, n in
             enumerate(lens)]
 
 
-def _workload_pool_pages(workload, max_new: int, decode_quantum: int) -> int:
+def _workload_pool_pages(workload, max_new: int, decode_quantum: int,
+                         max_slots: int = MAX_SLOTS, max_len: int = MAX_LEN,
+                         page_size: int = PAGE_SIZE) -> int:
     """Pool sized to the workload's worst case (+ the reserved trash page)
     instead of max_slots × max_len — the memory the paged engine banks."""
     from repro.serve.engine import worst_case_pages
 
     max_prompt = max(len(p) for _, p in workload)
-    return 1 + MAX_SLOTS * worst_case_pages(max_prompt, max_new,
-                                            decode_quantum, MAX_LEN,
-                                            PAGE_SIZE)
+    return 1 + max_slots * worst_case_pages(max_prompt, max_new,
+                                            decode_quantum, max_len,
+                                            page_size)
 
 
 def serve_once(mode: str, *, arch: str = "h2o-danube-1.8b",
                n_requests: int = 12, max_new: int = 16,
                decode_quantum: int = 8, seed: int = 0,
-               warmup: bool = False, reps: int = 1) -> dict:
+               warmup: bool = False, reps: int = 1,
+               max_slots: int = MAX_SLOTS, max_len: int = MAX_LEN,
+               page_size: int = PAGE_SIZE, paged_kernel=True,
+               lens: list[int] | None = None) -> dict:
     """mode: "fast" | "legacy" | "paged". `warmup` pre-runs a small workload
     so the timed pass measures steady state (used for the paged-vs-dense
     memory comparison, where compile counts are identical by construction
     and the interesting number is the per-token cost of page indirection);
     `reps` re-runs the timed workload and keeps the fastest pass (host
-    scheduling noise dwarfs the per-token delta on CPU smoke)."""
+    scheduling noise dwarfs the per-token delta on CPU smoke). `lens`
+    overrides the request lengths (long-context row); `paged_kernel`
+    selects the in-kernel table walk vs. the jnp gather escape hatch."""
     from repro.configs import get_config, smoke_config
     from repro.serve.engine import Request, make_engine
     from repro.sharding.axes import single_device_ctx
 
     cfg = smoke_config(get_config(arch))
     ctx = single_device_ctx()
-    work = _workload(cfg, n_requests, max_new, seed)
+    work = _workload(cfg, n_requests, max_new, seed, lens=lens)
     warm_work = _workload(cfg, 4, max_new, seed + 1) if warmup else []
     kw = {}
     if mode == "paged":
-        # size for the timed workload AND the (slightly longer) warmup pass
-        kw = dict(paged=True, page_size=PAGE_SIZE,
-                  num_pages=_workload_pool_pages(work + warm_work,
-                                                 max_new + 1, decode_quantum))
-    eng = make_engine(cfg, ctx, max_slots=MAX_SLOTS, max_len=MAX_LEN,
+        # size for the timed workload AND the (slightly longer) warmup pass;
+        # the allocator insists one full max_len context must always fit
+        pages = _workload_pool_pages(work + warm_work, max_new + 1,
+                                     decode_quantum, max_slots, max_len,
+                                     page_size)
+        kw = dict(paged=True, page_size=page_size, paged_kernel=paged_kernel,
+                  num_pages=max(pages, 1 + max_len // page_size))
+    eng = make_engine(cfg, ctx, max_slots=max_slots, max_len=max_len,
                       fast=mode != "legacy", decode_quantum=decode_quantum,
                       **kw)
     if warmup:
@@ -131,6 +157,47 @@ def paged_rows(**kw) -> list[dict]:
     return [dense, paged]
 
 
+def kernel_rows(**kw) -> list[dict]:
+    """In-kernel page-table walk vs. the jnp gathered view — both paged, on
+    an engine provisioned for long contexts (table width
+    KERNEL_MAX_LEN/PAGE_SIZE pages) serving the short-prompt smoke
+    workload. The gather path materializes and attends the full table
+    width for every token; the kernel path walks only the live page
+    prefix, so its per-token cost follows the context, not the
+    provisioning."""
+    kw.setdefault("arch", "mistral-nemo-12b")
+    kw.setdefault("max_len", KERNEL_MAX_LEN)
+    kw.setdefault("warmup", True)
+    kw.setdefault("reps", 3)
+    gather = serve_once("paged", paged_kernel=False, **kw)
+    kern = serve_once("paged", **kw)
+    kern["tok_s_vs_gather"] = kern["tok_s"] / max(gather["tok_s"], 1e-9)
+    gather["tok_s_vs_gather"] = 1.0
+    return [kern, gather]
+
+
+def long_ctx_row(**kw) -> dict:
+    """One request whose context (LONG_PROMPT + LONG_MAX_NEW tokens) cannot
+    exist under the dense engine's MAX_LEN-token rows at any slot count —
+    the PR 2 capacity win, now decoded through the kernel path. Reports the
+    pool actually reserved vs. what dense rows at the same provisioned
+    max_len would cost."""
+    from repro.configs import get_config, smoke_config
+    from repro.serve.kv_cache import cache_bytes
+
+    kw.setdefault("arch", "mistral-nemo-12b")
+    # rep 1 absorbs the 512-bucket prefill compile; best-of keeps the warm rep
+    kw.setdefault("reps", 2)
+    row = serve_once("paged", max_len=KERNEL_MAX_LEN,
+                     lens=[LONG_PROMPT, 9, 17], max_new=LONG_MAX_NEW, **kw)
+    cfg = smoke_config(get_config(kw["arch"]))
+    row["ctx"] = LONG_PROMPT + LONG_MAX_NEW
+    row["dense_max_ctx"] = MAX_LEN
+    row["dense_equiv_cache_bytes"] = cache_bytes(cfg, MAX_SLOTS,
+                                                 KERNEL_MAX_LEN, 1)
+    return row
+
+
 def rows(**kw) -> list[dict]:
     fast = serve_once("fast", **kw)
     legacy = serve_once("legacy", **kw)
@@ -163,6 +230,22 @@ def csv_rows(out: list[dict], mem: list[dict] | None) -> list[str]:
     return lines
 
 
+def kernel_csv_rows(kern: list[dict], long_row: dict) -> list[str]:
+    """Harness-contract rows for the paged-kernel comparison (BENCH_2)."""
+    lines = []
+    for name, r in zip(("kernel", "gather"), kern):
+        us = r["dt"] / max(r["tok"], 1) * 1e6
+        lines.append(f"serve/paged_{name}/tok_s,{us:.0f},{r['tok_s']:.1f}")
+    lines.append(f"serve/paged_kernel_vs_gather,0,"
+                 f"{kern[0]['tok_s_vs_gather']:.2f}")
+    us = long_row["dt"] / max(long_row["tok"], 1) * 1e6
+    lines.append(f"serve/long_ctx/ctx,{us:.0f},{long_row['ctx']}")
+    lines.append(f"serve/long_ctx/tok_s,{us:.0f},{long_row['tok_s']:.1f}")
+    lines.append(f"serve/long_ctx/reserved_cache_kb,{us:.0f},"
+                 f"{long_row['reserved_cache_bytes'] / 1024:.1f}")
+    return lines
+
+
 def write_bench_json(out: list[dict], mem: list[dict] | None,
                      path: str | Path = "BENCH_1.json") -> None:
     """The per-PR perf artifact — one writer, shared by main(), run.py, CI."""
@@ -192,15 +275,45 @@ def write_bench_json(out: list[dict], mem: list[dict] | None,
     Path(path).write_text(json.dumps(doc, indent=2) + "\n")
 
 
+def write_bench2_json(kern: list[dict], long_row: dict,
+                      path: str | Path = "BENCH_2.json") -> None:
+    """PR 3 perf artifact: in-kernel page-table decode vs. the gathered
+    view, plus the long-context point the dense cache cannot represent."""
+    kernel, gather = kern
+    doc = {
+        "bench": "paged_kernel_decode",
+        "arch": kernel["arch"] + " (smoke)",
+        "table_pages": KERNEL_MAX_LEN // PAGE_SIZE,
+        "provisioned_max_len": KERNEL_MAX_LEN,
+        "paged_kernel_tok_s": kernel["tok_s"],
+        "paged_gather_tok_s": gather["tok_s"],
+        "paged_kernel_vs_gather": kernel["tok_s_vs_gather"],
+        "long_ctx": long_row["ctx"],
+        "long_ctx_tok_s": long_row["tok_s"],
+        "long_ctx_reserved_cache_bytes": long_row["reserved_cache_bytes"],
+        "long_ctx_dense_equiv_cache_bytes":
+            long_row["dense_equiv_cache_bytes"],
+        "dense_max_ctx": long_row["dense_max_ctx"],
+        "all_done": bool(kernel["all_done"] and gather["all_done"]
+                         and long_row["all_done"]),
+    }
+    Path(path).write_text(json.dumps(doc, indent=2) + "\n")
+
+
 def main() -> None:
     out = rows()
     mem = paged_rows()
+    kern = kernel_rows()
+    long_row = long_ctx_row()
     fast, legacy = out
     dense, paged = mem
     print("name,us_per_call,derived")
     for line in csv_rows(out, mem):
         print(line)
+    for line in kernel_csv_rows(kern, long_row):
+        print(line)
     write_bench_json(out, mem)
+    write_bench2_json(kern, long_row)
     print(f"# fast: {fast['tok']} tok in {fast['dt']:.2f}s "
           f"({fast['tok_s']:.1f} tok/s), {fast['prefill_compiles']} prefill "
           f"compiles for {fast['distinct_prompt_lens']} distinct lengths, "
@@ -215,10 +328,25 @@ def main() -> None:
           f"{dense['reserved_cache_bytes'] / 1024:.0f} KiB, max single "
           f"context at dense HBM {paged['max_ctx_at_dense_hbm']} vs "
           f"{dense['max_ctx_at_dense_hbm']} tokens")
+    print(f"# paged kernel (max_len {KERNEL_MAX_LEN}): "
+          f"{kern[0]['tok_s']:.1f} tok/s vs gather {kern[1]['tok_s']:.1f} "
+          f"({kern[0]['tok_s_vs_gather']:.2f}×)")
+    print(f"# long ctx: {long_row['ctx']} tokens (dense rows top out at "
+          f"{long_row['dense_max_ctx']}) at {long_row['tok_s']:.1f} tok/s, "
+          f"pool {long_row['reserved_cache_bytes'] / 1024:.0f} KiB vs "
+          f"{long_row['dense_equiv_cache_bytes'] / 1024:.0f} KiB dense rows "
+          f"at the same provisioning")
     assert fast["all_done"] and legacy["all_done"]
     assert dense["all_done"] and paged["all_done"]
     assert paged["reserved_cache_bytes"] < dense["reserved_cache_bytes"], (
         "paged pool must reserve less HBM than dense rows")
+    assert kern[0]["all_done"] and kern[1]["all_done"] \
+        and long_row["all_done"]
+    assert long_row["ctx"] > long_row["dense_max_ctx"]
+    assert long_row["reserved_cache_bytes"] < \
+        long_row["dense_equiv_cache_bytes"], (
+            "long-context pool must undercut dense rows at the same "
+            "provisioned max_len")
 
 
 if __name__ == "__main__":

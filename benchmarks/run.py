@@ -82,6 +82,18 @@ def main() -> None:
     except Exception as e:  # serving bench must not sink the driver
         print(f"serve/unavailable,0,0  # {e}")
 
+    # --- Paged-attention kernel + long-context point (PR 3) ---------------
+    try:
+        from benchmarks.bench_serve import (kernel_csv_rows, kernel_rows,
+                                            long_ctx_row, write_bench2_json)
+        kern = kernel_rows()
+        long_row = long_ctx_row()
+        for line in kernel_csv_rows(kern, long_row):
+            print(line)
+        write_bench2_json(kern, long_row)
+    except Exception as e:  # kernel bench must not sink the driver
+        print(f"serve/paged_kernel_unavailable,0,0  # {e}")
+
     # --- Roofline summary (from dry-run artifacts, if present) ------------
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

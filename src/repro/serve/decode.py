@@ -10,6 +10,19 @@ batching; sliding-window layers use ring addressing (pos mod window).
 
 MLA decodes in the compressed latent space via the absorbed-weights trick:
 the cache row *is* both key and value (MQA-style, dim kv_lora+rope).
+
+Paged decode has two implementations selected by ``paged_kernel``:
+  * the default Pallas kernel path (`kernels/paged_attention`) — the page
+    table is scalar-prefetched and indexed *in-kernel*, one page block per
+    grid step, online-softmax carries in VMEM; the gathered `(B, T·ps, …)`
+    view never exists in HBM and the engine passes only the *live* prefix
+    of the table (bucketed), so decode cost scales with context, not with
+    the table width `max_len/page_size`;
+  * ``paged_kernel=False`` — the jnp gathered-view implementation
+    (`kernels/paged_attention/ref.py`, the PR 2 path) at full table
+    width, kept as the escape hatch and the equivalence oracle.
+In both, the in-page write of the new token's K/V stays a separate masked
+scatter (`_paged_write`) *outside* the attention kernel.
 """
 from __future__ import annotations
 
@@ -21,6 +34,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import ops as paged_ops
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod
 from repro.models.layers import apply_rope, mlp, rmsnorm, rope_tables, _softcap
@@ -81,31 +95,56 @@ def _paged_write(pool, new_row, pt, pos, i, msize):
     return pool.at[pagec, relc].set(jnp.where(mask, new_row, cur))
 
 
-def _paged_gather(pool, pt, i, msize):
-    """Gather a slot's pages into position order: pool (N, ps_loc, …) +
-    pt (B,T) → (view (B, T·ps_loc, …), gpos (T·ps_loc,) global positions
-    this shard holds)."""
-    ps_loc = pool.shape[1]
-    T = pt.shape[1]
-    ps = ps_loc * msize
-    g = jnp.take(pool, pt, axis=0)                         # (B, T, ps_loc, …)
-    g = g.reshape((pt.shape[0], T * ps_loc) + pool.shape[2:])
-    gpos = (jnp.arange(T)[:, None] * ps + i * ps_loc +
-            jnp.arange(ps_loc)[None]).reshape(-1)
-    return g, gpos
+def _paged_impl(paged_kernel) -> str:
+    """Map the user-facing ``paged_kernel`` flag onto a
+    `kernels/paged_attention/ops.py` impl name: True → backend auto
+    (compiled kernel on TPU, jnp ref elsewhere), a string → forwarded
+    verbatim, False → the jnp gathered-view oracle ("ref") — the PR 2
+    escape hatch, now one shared implementation instead of an inline
+    copy."""
+    if isinstance(paged_kernel, (bool, int)):    # 0/1 behave as the bools
+        return "" if paged_kernel else "ref"
+    return paged_kernel
+
+
+def _check_paged_args(page_table, pos, *, update: bool = True,
+                      window: int = 0) -> None:
+    """Typed validation shared by both paged decode entry points — these are
+    user-reachable through Engine/flash_decode callers, so they raise
+    ValueError instead of tripping asserts (PR 2 convention)."""
+    if not update:
+        raise ValueError(
+            "paged decode always writes the new token's K/V; attend-only "
+            "(update=False) callers must use the dense cache path")
+    if window:
+        raise ValueError(
+            f"paged cache is full-attention only (window={window}); "
+            "sliding-window layers keep their dense ring buffers")
+    if page_table.ndim != 2:
+        raise ValueError(
+            f"page_table must be (batch, table_width) int32, got shape "
+            f"{page_table.shape}")
+    if page_table.shape[0] != pos.shape[0]:
+        raise ValueError(
+            f"page_table batch {page_table.shape[0]} != pos batch "
+            f"{pos.shape[0]}")
 
 
 def flash_decode_gqa(q, k_new, v_new, ck, cv, pos, *, window: int,
                      scale: float, softcap: float, ctx: ShardCtx,
-                     update: bool = True, page_table=None):
+                     update: bool = True, page_table=None,
+                     paged_kernel=True):
     """q (B,Hkv,G,dh); k_new/v_new (B,Hkv,dh); ck/cv (B,Sc,Hkv,dh) kv_seq-
     sharded; pos (B,). → (out (B,Hkv,G,dh), ck', cv').
 
     update=False → attend-only (whisper cross-attention; pos = valid_len-1).
     page_table (B,T) int32 → paged mode: ck/cv are shared page pools
-    (num_pages, page_size, Hkv, dh) with the in-page offset kv_seq-sharded;
-    the slot's pages are gathered into position order before the same
-    exact-softmax partial combine (full attention only — rings stay dense).
+    (num_pages, page_size, Hkv, dh) with the in-page offset kv_seq-sharded
+    (full attention only — rings stay dense). ``paged_kernel`` selects the
+    Pallas in-kernel table walk (True, or an impl string forwarded to
+    `kernels/paged_attention/ops.py`) vs. the jnp gathered-view escape
+    hatch (False). Either way the per-shard (o, m, l) partials meet the
+    same exact-softmax `_combine` across the model axis.
     """
     mesh = ctx.mesh
     bp = ctx.spec(("batch", None, None, None), q.shape)[0]
@@ -116,28 +155,24 @@ def flash_decode_gqa(q, k_new, v_new, ck, cv, pos, *, window: int,
     msize = ctx.axis_size("model")         # static (jax<0.5: no lax.axis_size)
 
     if page_table is not None:
-        assert update and not window, "paged cache is full-attention decode"
+        _check_paged_args(page_table, pos, update=update, window=window)
         poolspec = ctx.spec((None, "kv_seq", "kv_heads", None), ck.shape)
         ptspec = P(bp, None)
+        # paged_kernel=False → pin the jnp gathered-view oracle (ref.py):
+        # full-width table, PR 2 cost model, one shared implementation
+        impl = _paged_impl(paged_kernel)
 
         def local_paged(q, kn, vn, pk, pv, pos, pt):
             i = jax.lax.axis_index("model")
             pk = _paged_write(pk, kn, pt, pos, i, msize)
             pv = _paged_write(pv, vn, pt, pos, i, msize)
-            gk, gpos = _paged_gather(pk, pt, i, msize)
-            gv, _ = _paged_gather(pv, pt, i, msize)
-            valid = gpos[None] <= pos[:, None]             # (B, T·ps_loc)
-            s = jnp.einsum("bhgd,bshd->bhgs", q.astype(F32) * scale,
-                           gk.astype(F32))
-            if softcap:
-                s = jnp.tanh(s / softcap) * softcap
-            s = jnp.where(valid[:, None, None], s, NEG)
-            m = jnp.max(s, -1)
-            m_safe = jnp.where(m <= NEG / 2, 0.0, m)
-            p = jnp.exp(s - m_safe[..., None])
-            p = jnp.where(valid[:, None, None], p, 0.0)
-            o = jnp.einsum("bhgs,bshd->bhgd", p, gv.astype(F32))
-            l = jnp.sum(p, -1)
+            B, hkv, grp, dh = q.shape
+            o, m, l = paged_ops.paged_attend_gqa(
+                q, pk, pv, pt, pos, i, msize, scale=scale,
+                softcap=softcap, impl=impl)
+            o = o.reshape(B, hkv, grp, dh)
+            m = m.reshape(B, hkv, grp)
+            l = l.reshape(B, hkv, grp)
             return _combine(o, m, l).astype(q.dtype), pk, pv
 
         fn = shard_map(local_paged, mesh=mesh,
@@ -184,11 +219,11 @@ def flash_decode_gqa(q, k_new, v_new, ck, cv, pos, *, window: int,
 
 
 def flash_decode_mla(q_eff, new_row, ckv, pos, *, kv_lora: int, scale: float,
-                     ctx: ShardCtx, page_table=None):
+                     ctx: ShardCtx, page_table=None, paged_kernel=True):
     """q_eff (B,H,R); new_row (B,R); ckv (B,Sc,R). Key = cache row, value =
     first kv_lora dims of the same row. page_table → ckv is the shared pool
-    (num_pages, page_size, R) and the slot's pages are gathered in position
-    order (see flash_decode_gqa)."""
+    (num_pages, page_size, R); `paged_kernel` as in flash_decode_gqa (MLA
+    shares the full-attention-only constraint — typed check, not assert)."""
     mesh = ctx.mesh
     bp = ctx.spec(("batch", None, None), q_eff.shape)[0]
     qspec = P(bp, None, None)
@@ -197,23 +232,17 @@ def flash_decode_mla(q_eff, new_row, ckv, pos, *, kv_lora: int, scale: float,
     msize = ctx.axis_size("model")
 
     if page_table is not None:
+        _check_paged_args(page_table, pos)
         poolspec = ctx.spec((None, "kv_seq", None), ckv.shape)
         ptspec = P(bp, None)
+        impl = _paged_impl(paged_kernel)
 
         def local_paged(q, row, pool, pos, pt):
             i = jax.lax.axis_index("model")
             pool = _paged_write(pool, row, pt, pos, i, msize)
-            g, gpos = _paged_gather(pool, pt, i, msize)
-            valid = gpos[None] <= pos[:, None]
-            s = jnp.einsum("bhr,bsr->bhs", q.astype(F32) * scale,
-                           g.astype(F32))
-            s = jnp.where(valid[:, None], s, NEG)
-            m = jnp.max(s, -1)
-            m_safe = jnp.where(m <= NEG / 2, 0.0, m)
-            p = jnp.exp(s - m_safe[..., None])
-            p = jnp.where(valid[:, None], p, 0.0)
-            o = jnp.einsum("bhs,bsr->bhr", p, g[..., :kv_lora].astype(F32))
-            l = jnp.sum(p, -1)
+            o, m, l = paged_ops.paged_attend_mla(
+                q, pool, pt, pos, i, msize, kv_lora=kv_lora,
+                scale=scale, impl=impl)
             return _combine(o, m, l).astype(q.dtype), pool
 
         fn = shard_map(local_paged, mesh=mesh,
@@ -251,7 +280,7 @@ def flash_decode_mla(q_eff, new_row, ckv, pos, *, kv_lora: int, scale: float,
 
 # --------------------------------------------------------- per-block decode
 def gqa_decode(cfg: ModelConfig, p, x, cache, pos, window, ctx: ShardCtx,
-               page_table=None):
+               page_table=None, paged_kernel=True):
     """x (B,D) → (out (B,D), new cache)."""
     B = x.shape[0]
     q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
@@ -266,7 +295,7 @@ def gqa_decode(cfg: ModelConfig, p, x, cache, pos, window, ctx: ShardCtx,
     out, ck, cv = flash_decode_gqa(
         qg, k, v, cache["k"], cache["v"], pos, window=window,
         scale=cfg.head_dim ** -0.5, softcap=cfg.attn_softcap, ctx=ctx,
-        page_table=page_table)
+        page_table=page_table, paged_kernel=paged_kernel)
     out = out.reshape(B, cfg.n_heads * cfg.head_dim)
     o = jnp.einsum("bk,kd->bd",
                    out, p["wo"].reshape(-1, cfg.d_model))
@@ -274,7 +303,7 @@ def gqa_decode(cfg: ModelConfig, p, x, cache, pos, window, ctx: ShardCtx,
 
 
 def mla_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ShardCtx,
-               page_table=None):
+               page_table=None, paged_kernel=True):
     m = cfg.mla
     B = x.shape[0]
     x3 = x[:, None, :]
@@ -298,7 +327,8 @@ def mla_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ShardCtx,
     scale = (m.nope_dim + m.rope_dim) ** -0.5
     o_c, ckv = flash_decode_mla(q_eff, row, cache["ckv"], pos,
                                 kv_lora=m.kv_lora, scale=scale, ctx=ctx,
-                                page_table=page_table)
+                                page_table=page_table,
+                                paged_kernel=paged_kernel)
     # un-absorb values: o = (o_c · W_uv) then output proj
     wuv = p["wukv"][..., m.nope_dim:]                  # (R, H, v)
     o = jnp.einsum("bhr,rhv->bhv", o_c, wuv)
@@ -307,17 +337,19 @@ def mla_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ShardCtx,
 
 
 def block_decode(cfg: ModelConfig, bc, p, cache, h, pos, ctx: ShardCtx,
-                 page_table=None):
+                 page_table=None, paged_kernel=True):
     x = rmsnorm(h, p["norm1"], cfg.norm_eps)
     if bc.mixer == "attn":
         # only full-attention layers are paged; rings keep dense buffers
         pt = None if bc.window else page_table
         if cfg.mla:
             y, new_cache = mla_decode(cfg, p["attn"], x, cache, pos, ctx,
-                                      page_table=pt)
+                                      page_table=pt,
+                                      paged_kernel=paged_kernel)
         else:
             y, new_cache = gqa_decode(cfg, p["attn"], x, cache, pos,
-                                      bc.window, ctx, page_table=pt)
+                                      bc.window, ctx, page_table=pt,
+                                      paged_kernel=paged_kernel)
     else:
         step = (mamba_mod.mamba2_step if cfg.ssm.version == 2
                 else mamba_mod.mamba1_step)
@@ -339,7 +371,7 @@ def block_decode(cfg: ModelConfig, bc, p, cache, h, pos, ctx: ShardCtx,
 
 # ------------------------------------------------------------- decode step
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos, ctx: ShardCtx,
-                page_table=None):
+                page_table=None, paged_kernel=True):
     """tokens (B,), pos (B,) → (logits (B,V) f32 vocab-sharded, new cache).
     page_table (B,T) → full-attention cache leaves are page pools."""
     segments = layer_schedule(cfg)
@@ -356,7 +388,8 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, ctx: ShardCtx,
             for j, bc in enumerate(seg.pattern):
                 hc, nc = block_decode(cfg, bc, slot_params[f"s{j}"],
                                       slot_cache[f"s{j}"], hc, pos, ctx,
-                                      page_table=page_table)
+                                      page_table=page_table,
+                                      paged_kernel=paged_kernel)
                 new_slot[f"s{j}"] = nc
             return hc, new_slot
 
@@ -373,15 +406,32 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, ctx: ShardCtx,
 
 
 # ------------------------------------------------------ fused decode loop
+def _sample_tokens(logits, key, *, temperature: float, top_k: int):
+    """Next-token choice on device. `temperature` is a *static* float:
+    0 → greedy argmax (no PRNG consumed, HLO identical to the PR 1 loop);
+    > 0 → temperature-scaled (optionally top-k-truncated) categorical."""
+    if not temperature:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    lg = logits.astype(F32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]        # (B, 1)
+        lg = jnp.where(lg < kth, NEG, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
 def decode_loop(cfg: ModelConfig, params, cache, tokens, pos, active,
                 remaining, ctx: ShardCtx, *, num_steps: int, eos_id: int,
-                max_len: int, page_table=None):
-    """Multi-token greedy decode fused into one device program.
+                max_len: int, page_table=None, paged_kernel=True,
+                temperature: float = 0.0, top_k: int = 0, rng=None):
+    """Multi-token decode fused into one device program.
 
     Wraps `decode_step` in a `jax.lax.scan` over a quantum of `num_steps`
-    tokens with argmax *on device* and per-slot done masking, so the host
+    tokens with sampling *on device* and per-slot done masking, so the host
     syncs once per quantum instead of once per token (DESIGN.md §"Serving
-    fast path"). All carries are (B,) device arrays the engine keeps
+    fast path"). Sampling is greedy argmax at `temperature=0` and
+    temperature/top-k categorical otherwise; the PRNG key rides in the scan
+    carry (split once per step), so real sampling costs zero extra host
+    syncs. All carries are (B,)-or-key device arrays the engine keeps
     resident between cycles; the engine jits this with the cache and state
     donated so decoding stops allocating a fresh cache every token.
 
@@ -392,37 +442,50 @@ def decode_loop(cfg: ModelConfig, params, cache, tokens, pos, active,
     whatever they scribble into their cache rows is overwritten by the next
     prefill insert into that slot.
 
-    Returns ((cache, tokens, pos, active, remaining),
+    Returns ((cache, tokens, pos, active, remaining, rng),
              emitted (num_steps, B) int32, emitted_mask (num_steps, B) bool).
     """
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
 
     def body(carry, _):
-        cache, tokens, pos, active, remaining = carry
+        cache, tokens, pos, active, remaining, key = carry
         logits, cache = decode_step(cfg, params, cache, tokens, pos, ctx,
-                                    page_table=page_table)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                                    page_table=page_table,
+                                    paged_kernel=paged_kernel)
+        if temperature:
+            key, sub = jax.random.split(key)
+        else:
+            sub = key
+        nxt = _sample_tokens(logits, sub, temperature=temperature,
+                             top_k=top_k)
         emit_tok = jnp.where(active, nxt, -1)
         remaining = remaining - active.astype(remaining.dtype)
         pos = pos + active.astype(pos.dtype)
         still = active & (remaining > 0) & (nxt != eos_id) & \
             (pos < max_len - 1)
         tokens = jnp.where(still, nxt, tokens)
-        return (cache, tokens, pos, still, remaining), (emit_tok, active)
+        return (cache, tokens, pos, still, remaining, key), (emit_tok, active)
 
-    carry = (cache, tokens, pos, active, remaining)
+    carry = (cache, tokens, pos, active, remaining, rng)
     carry, (toks, msks) = jax.lax.scan(body, carry, None, length=num_steps)
     return carry, toks, msks
 
 
 def decode_loop_fn(cfg: ModelConfig, ctx: ShardCtx, *, num_steps: int,
-                   eos_id: int, max_len: int, paged: bool = False):
-    """Engine-facing closure, shaped for jit(donate_argnums=(1,2,3,4,5)).
+                   eos_id: int, max_len: int, paged: bool = False,
+                   paged_kernel=True, temperature: float = 0.0,
+                   top_k: int = 0):
+    """Engine-facing closure, shaped for jit(donate_argnums=(1,…,6)).
 
     Returns (carry, packed) where `packed` is one (2·num_steps + 1, B) int32
     array — emitted tokens, emission masks, then the post-quantum `active`
     vector — so the engine's quantum costs exactly ONE blocking host fetch
-    (three separate fetches would sync the pipe three times). In paged mode
-    the loop takes the (B,T) page table as a trailing, non-donated arg."""
+    (three separate fetches would sync the pipe three times). The PRNG key
+    is carry slot 5, donated and device-resident like the rest. In paged
+    mode the loop takes the (B,T) page table as a trailing, non-donated
+    arg; the engine passes only the table's *live* prefix (bucketed), which
+    is what lets the kernel path skip dead pages wholesale."""
 
     def _pack(carry, toks, msks):
         active = carry[3]
@@ -431,18 +494,21 @@ def decode_loop_fn(cfg: ModelConfig, ctx: ShardCtx, *, num_steps: int,
             axis=0)
 
     if paged:
-        def loop(params, cache, tokens, pos, active, remaining, page_table):
+        def loop(params, cache, tokens, pos, active, remaining, rng,
+                 page_table):
             carry, toks, msks = decode_loop(
                 cfg, params, cache, tokens, pos, active, remaining, ctx,
                 num_steps=num_steps, eos_id=eos_id, max_len=max_len,
-                page_table=page_table)
+                page_table=page_table, paged_kernel=paged_kernel,
+                temperature=temperature, top_k=top_k, rng=rng)
             return _pack(carry, toks, msks)
         return loop
 
-    def loop(params, cache, tokens, pos, active, remaining):
+    def loop(params, cache, tokens, pos, active, remaining, rng):
         carry, toks, msks = decode_loop(
             cfg, params, cache, tokens, pos, active, remaining, ctx,
-            num_steps=num_steps, eos_id=eos_id, max_len=max_len)
+            num_steps=num_steps, eos_id=eos_id, max_len=max_len,
+            temperature=temperature, top_k=top_k, rng=rng)
         return _pack(carry, toks, msks)
 
     return loop

@@ -26,6 +26,18 @@ through a per-slot page table, with a host-side free-list allocator — pages
 are granted at admission, topped up ahead of each decode quantum, and
 recycled when a request completes, so short requests stop stranding
 max_len-sized cache rows. Ring and mamba layers keep their dense layouts.
+Paged decode attention runs the Pallas paged flash-decode kernel by default
+(`paged_kernel=True`; `kernels/paged_attention`): the page table is indexed
+*in-kernel* and the engine hands the decode loop only the table's *live*
+page-column prefix (bucketed to powers of two to bound recompiles), so
+per-token attention cost scales with actual context instead of the table
+width `max_len/page_size`. `paged_kernel=False` pins the jnp gathered-view
+implementation at full table width — the PR 2 cost model — as the escape
+hatch.
+
+Sampling: `temperature=0` (default) is greedy argmax; `temperature>0`
+enables on-device temperature/top-k categorical sampling with the PRNG key
+carried through the decode scan (still exactly one host sync per quantum).
 
 `fast=False` keeps the original per-token / per-prompt reference path; the
 benchmark (benchmarks/bench_serve.py) and the equivalence tests in
@@ -44,10 +56,11 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
 from repro.core.chunking import cpu_chunk
+from repro.kernels.paged_attention import ops as paged_ops
 from repro.core.tracker import ThroughputTracker
 from repro.models.model import model_defs
 from repro.models.transformer import layer_schedule
-from repro.serve.decode import decode_loop_fn, decode_step
+from repro.serve.decode import _sample_tokens, decode_loop_fn, decode_step
 from repro.serve.kv_cache import cache_defs, cache_kinds, paged_cache_defs
 from repro.serve.prefill import bucket_len, prefill
 from repro.sharding import params as prm
@@ -166,12 +179,30 @@ class Engine:
                  decode_quantum: int = 8, prefill_batch: int | None = None,
                  min_bucket: int = 16, fast: bool = True,
                  paged: bool = False, page_size: int = 16,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None, paged_kernel=True,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0):
         assert not cfg.enc_dec, "enc-dec serving uses whisper_decode_step"
         self.cfg, self.params, self.ctx = cfg, params, ctx
         self.max_slots, self.max_len, self.eos_id = max_slots, max_len, eos_id
         self.fast = fast
         self.decode_quantum = max(1, decode_quantum)
+        if temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        if not 0 <= top_k <= cfg.vocab:
+            raise ValueError(f"top_k must be in [0, vocab={cfg.vocab}], "
+                             f"got {top_k}")
+        if temperature and not fast:
+            raise ValueError("sampling (temperature > 0) requires fast=True "
+                             "— the legacy reference path is greedy only")
+        self.temperature, self.top_k = float(temperature), int(top_k)
+        if isinstance(paged_kernel, (bool, int)):
+            paged_kernel = bool(paged_kernel)   # 0/1 → canonical bools
+        elif paged_kernel not in paged_ops._IMPLS:
+            raise ValueError(
+                f"paged_kernel must be a bool or one of {paged_ops._IMPLS}, "
+                f"got {paged_kernel!r}")
+        self.paged_kernel = paged_kernel
         self.prefill_batch = prefill_batch or max_slots
         self.min_bucket = min_bucket
         # padded buckets are only sound when every mixer is attention —
@@ -243,6 +274,10 @@ class Engine:
         self.active_dev = jax.device_put(jnp.zeros(max_slots, bool), repl)
         self.remaining_dev = jax.device_put(jnp.zeros(max_slots, jnp.int32),
                                             repl)
+        self.rng_dev = jax.device_put(jax.random.PRNGKey(sample_seed), repl)
+        # independent stream for first-token sampling at prefill (split per
+        # admitted group on host — a device op, not a blocking fetch)
+        self._prefill_rng = jax.random.PRNGKey(sample_seed + 1)
         # ---- jitted cells -------------------------------------------------
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos, ctx))
@@ -251,8 +286,10 @@ class Engine:
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._decode_loop = jax.jit(
             decode_loop_fn(cfg, ctx, num_steps=self.decode_quantum,
-                           eos_id=eos_id, max_len=max_len, paged=self.paged),
-            donate_argnums=(1, 2, 3, 4, 5))
+                           eos_id=eos_id, max_len=max_len, paged=self.paged,
+                           paged_kernel=self.paged_kernel,
+                           temperature=self.temperature, top_k=self.top_k),
+            donate_argnums=(1, 2, 3, 4, 5, 6))
         self._prefill_fast = jax.jit(self._prefill_fast_impl)
         self._admit = jax.jit(
             self._admit_paged_impl if self.paged else self._admit_impl,
@@ -267,14 +304,18 @@ class Engine:
         return jax.tree.map(ins, cache, one_cache)
 
     # ---- fast path: batched prefill + fused admission --------------------
-    def _prefill_fast_impl(self, params, toks, prompt_len):
-        """(P,Sb) padded prompts → (first greedy token (P,), batched cache).
-        Argmax happens on device so admission never ships logits home."""
+    def _prefill_fast_impl(self, params, toks, prompt_len, key):
+        """(P,Sb) padded prompts → (first sampled token (P,), batched
+        cache). Sampling (greedy at temperature=0) happens on device so
+        admission never ships logits home — the first token of a stream
+        follows the same temperature/top-k law as the decode loop."""
         logits, cache = prefill(self.cfg, params, toks, self.ctx,
                                 max_len=self.max_len, prompt_len=prompt_len,
                                 page_size=(self.page_size if self.paged
                                            else None))
-        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+        first = _sample_tokens(logits, key, temperature=self.temperature,
+                               top_k=self.top_k)
+        return first, cache
 
     def _admit_state(self, tokens, pos, active, remaining, hit, idx,
                      first, prompt_len, max_new):
@@ -395,6 +436,27 @@ class Engine:
             self.page_table_dev = jnp.asarray(self.alloc.table)
             self._table_dirty = False
 
+    def _live_page_table(self, active_slots: list[int]):
+        """Page-table view handed to the decode loop. The kernel path gets
+        only the *live* column prefix — enough pages to cover every active
+        slot through the coming quantum, rounded up to a power of two so the
+        loop compiles once per bucket, not once per context length, and
+        floored at 8 pages: sub-8 buckets save nothing measurable but
+        multiply compiles (an all-short admission wave would mint a fresh
+        bucket mid-serve). The gather path keeps the full table (the PR 2
+        escape hatch stays byte-identical). Slots whose stale `pos` exceeds
+        the sliced width are routed to the trash page by `_paged_write`'s
+        range guard."""
+        if not self.paged_kernel:
+            return self.page_table_dev
+        end = max(min(int(self.pos_host[i]) + self.decode_quantum,
+                      self.max_len) for i in active_slots)
+        n_live = max(-(-end // self.page_size), 8)
+        n_live = min(self.pages_per_slot, 1 << (n_live - 1).bit_length())
+        if n_live == self.pages_per_slot:  # full width → no slice dispatch
+            return self.page_table_dev
+        return self.page_table_dev[:, :n_live]
+
     # ---- one engine cycle -------------------------------------------------
     def step(self) -> None:
         if not self.fast:
@@ -418,13 +480,14 @@ class Engine:
         t0 = time.perf_counter()
         n0 = _jit_cache_size(self._decode_loop)
         args = (self.params, self.cache, self.tokens_dev, self.pos_dev,
-                self.active_dev, self.remaining_dev)
+                self.active_dev, self.remaining_dev, self.rng_dev)
         if self.paged:
-            carry, packed = self._decode_loop(*args, self.page_table_dev)
+            carry, packed = self._decode_loop(
+                *args, self._live_page_table(active_slots))
         else:
             carry, packed = self._decode_loop(*args)
         (self.cache, self.tokens_dev, self.pos_dev, self.active_dev,
-         self.remaining_dev) = carry
+         self.remaining_dev, self.rng_dev) = carry
         packed_h = _host_fetch(packed)         # the ONE host sync per quantum
         dt = time.perf_counter() - t0
         self.quanta += 1
@@ -530,8 +593,9 @@ class Engine:
         t0 = time.perf_counter()
         p0 = _jit_cache_size(self._prefill_fast)
         a0 = _jit_cache_size(self._admit)
+        self._prefill_rng, sub = jax.random.split(self._prefill_rng)
         first, new_cache = self._prefill_fast(self.params, jnp.asarray(toks),
-                                              jnp.asarray(pl))
+                                              jnp.asarray(pl), sub)
         (self.cache, self.tokens_dev, self.pos_dev, self.active_dev,
          self.remaining_dev) = self._admit(
             self.cache, self.tokens_dev, self.pos_dev, self.active_dev,

@@ -146,7 +146,7 @@ def test_paged_pool_exhaustion_backpressure(ctx):
 
 
 # model-sharded pool: exercises the msize>1 masked in-page-offset writes
-# and the gpos page interleaving in _paged_write/_paged_gather, which the
+# and the gpos page interleaving in _paged_write/ref._gathered, which the
 # single-device tests shortcut past (8-device subprocess, cp_window style)
 _SHARDED = textwrap.dedent("""
     import os
@@ -219,10 +219,13 @@ def test_paged_rejects_data_parallel_mesh():
 
 
 # ------------------------------------------------------- host-sync probe
-@pytest.mark.parametrize("paged", [False, True])
-def test_single_host_fetch_per_quantum(ctx, monkeypatch, paged):
+@pytest.mark.parametrize("kw", [{}, {"paged": True, "page_size": 8},
+                                {"temperature": 0.8, "top_k": 4}],
+                         ids=["dense", "paged", "sampled"])
+def test_single_host_fetch_per_quantum(ctx, monkeypatch, kw):
     """The fast path performs exactly ONE blocking device→host fetch per
-    decode quantum (plus one per admitted prefill group)."""
+    decode quantum (plus one per admitted prefill group) — including under
+    paged decode and on-device sampling (PRNG key stays device-resident)."""
     cfg = _cfg()
     calls = {"n": 0}
     orig = engine_mod._host_fetch
@@ -232,7 +235,6 @@ def test_single_host_fetch_per_quantum(ctx, monkeypatch, paged):
         return orig(x)
 
     monkeypatch.setattr(engine_mod, "_host_fetch", probe)
-    kw = dict(paged=True, page_size=8) if paged else {}
     eng, reqs = _serve(cfg, ctx, _prompts(cfg, [4, 9, 17]), 8, **kw)
     assert all(r.done for r in reqs)
     assert eng.quanta > 0 and eng.prefill_groups > 0

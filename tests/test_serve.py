@@ -135,7 +135,7 @@ def test_quantum_decode_equivalence(ctx):
     tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
     pos0 = jnp.full((B,), S, jnp.int32)
     remaining = jnp.asarray([N + 5, 4, N + 5], jnp.int32)  # row 1 stops early
-    (_, _, pos, active, rem), loop_toks, loop_msks = decode_loop(
+    (_, _, pos, active, rem, _), loop_toks, loop_msks = decode_loop(
         cfg, params, cache, tok0, pos0, jnp.ones(B, bool), remaining, ctx,
         num_steps=N, eos_id=-1, max_len=max_len)
     # reference: single steps with host-side masking
@@ -225,3 +225,47 @@ def test_engine_continuous_batching(ctx):
     eng2 = make_engine(cfg, ctx, max_slots=3, max_len=64)
     eng2.run(r2)
     assert r2[0].out == reqs[0].out
+
+
+# ------------------------------------------------------- on-device sampling
+def test_sampling_determinism_and_greedy(ctx):
+    """decode_loop sampling (ROADMAP "Real sampling"): temperature/top-k
+    runs on device with the PRNG key as a scan carry — reproducible per
+    seed, seed-sensitive, top_k=1 ≡ greedy, temperature=0 ≡ the default
+    engine — and still exactly one host fetch per quantum."""
+    cfg = smoke_config(all_configs()["mistral-nemo-12b"])
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (5, 9, 17)]
+
+    def serve(**kw):
+        eng = make_engine(cfg, ctx, max_slots=2, max_len=64,
+                          decode_quantum=4, **kw)
+        reqs = [Request(rid=i, prompt=p, max_new=8)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)
+        return [r.out for r in reqs]
+
+    greedy = serve()
+    assert serve(temperature=0.0) == greedy            # static greedy path
+    # top_k=1 collapses the categorical onto the argmax regardless of seed
+    assert serve(temperature=0.7, top_k=1, sample_seed=5) == greedy
+    a = serve(temperature=0.8, top_k=4, sample_seed=0)
+    assert serve(temperature=0.8, top_k=4, sample_seed=0) == a
+    assert serve(temperature=0.8, top_k=4, sample_seed=1) != a
+    assert all(t >= 0 for out in a for t in out)       # real token ids
+    # the FIRST token of a stream is sampled too (prefill argmax would pin
+    # position 0 to greedy for every seed)
+    hot = serve(temperature=5.0, sample_seed=2)
+    assert [o[0] for o in hot] != [o[0] for o in greedy]
+
+
+def test_sampling_engine_validation(ctx):
+    cfg = smoke_config(all_configs()["mistral-nemo-12b"])
+    with pytest.raises(ValueError):
+        make_engine(cfg, ctx, temperature=-0.1)
+    with pytest.raises(ValueError):
+        make_engine(cfg, ctx, top_k=-1)
+    with pytest.raises(ValueError):               # typed at construction,
+        make_engine(cfg, ctx, top_k=cfg.vocab + 1)  # not a lax.top_k trace
+    with pytest.raises(ValueError):               # legacy path is greedy
+        make_engine(cfg, ctx, fast=False, temperature=0.5)
