@@ -94,6 +94,17 @@ def main() -> None:
     except Exception as e:  # kernel bench must not sink the driver
         print(f"serve/paged_kernel_unavailable,0,0  # {e}")
 
+    # --- Multi-engine heterogeneous tier pool (PR 4) -----------------------
+    try:
+        from benchmarks.bench_serve import (multi_csv_rows, multi_tier_rows,
+                                            write_bench3_json)
+        mt = multi_tier_rows()
+        for line in multi_csv_rows(mt):
+            print(line)
+        write_bench3_json(mt)
+    except Exception as e:  # multi-tier bench must not sink the driver
+        print(f"serve/multi_tier_unavailable,0,0  # {e}")
+
     # --- Roofline summary (from dry-run artifacts, if present) ------------
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

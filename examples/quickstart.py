@@ -23,6 +23,9 @@ from repro.train.step import init_state, make_train_step
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="no-op compatibility flag: the quickstart already "
+                         "runs the family-preserving smoke reduction")
     args = ap.parse_args()
 
     cfg = smoke_config(get_config(args.arch))

@@ -28,7 +28,12 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache (shared page pool + per-slot "
                          "page table; full-attention archs)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed workload for CI smoke (fast, asserts "
+                         "completion)")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.max_new = 4, 4
 
     cfg = smoke_config(get_config(args.arch))
     ctx = single_device_ctx()
@@ -59,6 +64,9 @@ def main():
               f"reserved cache {eng.reserved_cache_bytes() / 1024:.0f} KiB")
     for r in reqs:
         print(f"  req {r.rid:2d} prompt[{len(r.prompt):2d}] → {r.out}")
+    if args.smoke:
+        assert all(r.done for r in reqs), "smoke: all requests must finish"
+        print("smoke OK")
 
 
 if __name__ == "__main__":

@@ -68,11 +68,27 @@ from repro.sharding.axes import ShardCtx, mesh_axis_size
 
 
 class PromptTooLongError(ValueError):
-    """Raised at submit() for prompts the engine can never schedule."""
+    """Raised at ``submit()`` for a prompt the engine can never schedule.
+
+    A prompt of ``n`` tokens needs at least one decode slot after prefill,
+    so ``n`` must be strictly less than the engine's ``max_len``. Raised
+    eagerly at submission (not mid-serve) so callers can route the request
+    to a longer-context engine — ``MultiEngine`` checks every tier before
+    accepting. Subclasses :class:`ValueError`.
+    """
 
 
 class EngineStallError(RuntimeError):
-    """run() made no progress for far longer than the workload warrants."""
+    """``run()``/``drain()`` made no forward progress for far longer than
+    the outstanding workload warrants.
+
+    The cycle guard is proportional to queued work (one admission cycle
+    per request plus ``max_new / decode_quantum`` decode cycles, with 8×
+    slack — see ``Engine._guard_limit``), so this indicates a scheduling
+    bug or slot/pool starvation rather than a slow model. The message
+    reports pending and unfinished request counts; ``MultiEngine`` raises
+    it with per-tier diagnostics. Subclasses :class:`RuntimeError`.
+    """
 
 
 def worst_case_pages(prompt_len: int, max_new: int, decode_quantum: int,
@@ -94,11 +110,48 @@ def _host_fetch(x) -> np.ndarray:
 
 @dataclass
 class Request:
+    """One generation request.
+
+    Attributes:
+      rid: caller-chosen id (engines never interpret it; benchmarks and
+        multi-tier routing logs key on it).
+      prompt: token ids to prefill. Must be non-empty and shorter than the
+        serving engine's ``max_len``.
+      max_new: decode budget — the stream stops after this many generated
+        tokens (the first is sampled at prefill), at EOS, or at the
+        context limit, whichever comes first.
+      out: generated token ids, appended as quanta complete.
+      done: set by the engine when the stream is finished.
+    """
     rid: int
     prompt: list[int]
     max_new: int = 16
     out: list[int] = field(default_factory=list)
     done: bool = False
+
+
+@dataclass
+class StepReport:
+    """What one engine cycle did — the tier-facing throughput surface.
+
+    ``MultiEngine`` feeds ``(decoded, dt)`` of warm cycles into the shared
+    cross-tier :class:`~repro.core.tracker.ThroughputTracker`, which is
+    what the routing law measures per-tier tok/s from; single-engine
+    callers are free to ignore the return value (PR ≤ 3 behaviour).
+
+    Attributes:
+      admitted: requests moved from pending into slots this cycle.
+      decoded: decode tokens emitted across all slots this cycle.
+      dt: wall seconds of the decode quantum dispatch (device interval;
+        host-side bookkeeping excluded).
+      warm: False when the quantum triggered a fresh XLA compile — such
+        intervals measure the compiler, not the tier, and must not be fed
+        to a throughput tracker.
+    """
+    admitted: int = 0
+    decoded: int = 0
+    dt: float = 0.0
+    warm: bool = True
 
 
 def _jit_cache_size(fn) -> int:
@@ -182,6 +235,52 @@ class Engine:
                  num_pages: int | None = None, paged_kernel=True,
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0):
+        """Build a serving engine over an existing parameter tree.
+
+        Args:
+          cfg: model config (any decoder-only family; enc-dec audio serves
+            through ``whisper_decode_step`` instead).
+          params: parameter tree from ``prm.materialize(model_defs(cfg))``
+            — may be shared (read-only) across several engines, which is
+            how ``MultiEngine`` builds token-equivalent tiers.
+          ctx: sharding context; the KV cache is mesh-placed at init.
+          max_slots: decode batch width — concurrent streams.
+          max_len: per-slot context capacity (prompt + generated tokens).
+            Prompts must be strictly shorter (``PromptTooLongError``).
+          eos_id: token id that ends a stream (-1: never).
+          decode_quantum: tokens decoded per fused dispatch; the host syncs
+            exactly once per quantum. Also the fixed accelerator chunk
+            ``S_f`` of the HBB admission law.
+          prefill_batch: rows per batched prefill dispatch (default
+            ``max_slots``).
+          min_bucket: smallest power-of-2 prompt-length bucket; one XLA
+            compile per bucket, not per distinct prompt length.
+          fast: False pins the original per-token reference path (greedy
+            only; baselines and equivalence tests).
+          paged: serve full-attention KV from a shared page pool with a
+            per-slot page table instead of dense ``max_slots × max_len``
+            rows (DESIGN.md §5). Requires ``fast=True`` and an unsharded
+            batch axis; rings/mamba state stay dense either way.
+          page_size: tokens per KV page; must divide ``max_len`` and be a
+            multiple of the model-axis size.
+          num_pages: pool size including the reserved trash page 0
+            (default: enough for every slot at full ``max_len``). Sizing
+            it *below* the worst case is the point — admission exerts
+            backpressure instead of stranding HBM.
+          paged_kernel: True (default) walks the page table *in-kernel*
+            (Pallas on TPU, the fused blockwise reference on CPU) so
+            decode cost follows live context; False pins the jnp
+            gathered-view escape hatch at full table width (the PR 2 cost
+            model / equivalence oracle). A string names a
+            ``kernels/paged_attention`` impl explicitly (e.g.
+            ``"interpret"``).
+          temperature: 0 (default) decodes greedy argmax; > 0 samples a
+            temperature-scaled categorical on device (PRNG key rides the
+            decode scan carry — still one host sync per quantum).
+          top_k: truncate sampling to the k most likely tokens (0: off;
+            1 collapses to greedy regardless of seed).
+          sample_seed: PRNG seed for sampling; same seed → same streams.
+        """
         assert not cfg.enc_dec, "enc-dec serving uses whisper_decode_step"
         self.cfg, self.params, self.ctx = cfg, params, ctx
         self.max_slots, self.max_len, self.eos_id = max_slots, max_len, eos_id
@@ -410,6 +509,65 @@ class Engine:
         """Persistently reserved KV-cache HBM (pool + dense leaves)."""
         return sum(int(x.nbytes) for x in jax.tree.leaves(self.cache))
 
+    # ---- tier-facing interface (submit / step / drain) -------------------
+    # MultiEngine treats an Engine as one resource of the paper's CC/FC
+    # pool: it probes capacity, hands over queued requests, steps it, and
+    # reclaims whatever the engine's own admission law left pending.
+    def has_work(self) -> bool:
+        """True while any request is pending or occupies a decode slot."""
+        return bool(self.pending) or any(r is not None for r in self.slot_req)
+
+    def take_pending(self) -> list[Request]:
+        """Hand back the not-yet-admitted queue (admitted requests stay —
+        their KV lives in this engine's cache). A multi-tier router calls
+        this after each cycle so work an engine could not admit (slot or
+        pool backpressure) reroutes instead of queueing behind it."""
+        out, self.pending = self.pending, []
+        return out
+
+    def plan_admission(self, reqs: list[Request]) -> int:
+        """How many of ``reqs`` (a prefix, in order) this engine could admit
+        right now: bounded by free slots net of already-pending work and,
+        for paged engines, by the pool's worst-case commit budget. Purely
+        advisory — submission still goes through ``submit()`` — but it lets
+        a router keep work off a tier that cannot take it."""
+        n = min(len(reqs), len(self.free_slots()) - len(self.pending))
+        if n <= 0:
+            return 0
+        if not self.paged:
+            return n
+        # already-pending requests will commit their worst case first —
+        # count them against the pool before promising capacity for more
+        planned = sum(self._worst_pages(r) for r in self.pending)
+        k = 0
+        for req in reqs[:n]:
+            w = self._worst_pages(req)
+            if not self.alloc.can_commit(planned + w):
+                break
+            planned += w
+            k += 1
+        return k
+
+    def decode_throughput(self) -> float:
+        """EWMA decode tokens/sec this engine has measured for itself (0.0
+        until the first warm quantum). The cross-tier router prefers the
+        shared tracker it feeds from :class:`StepReport`; this accessor is
+        for introspection and examples."""
+        return self.tracker.throughput("decode")
+
+    def drain(self) -> None:
+        """Step until no pending or admitted work remains (same stall guard
+        as ``run()``). Tier-facing shutdown: a router that stops routing to
+        this engine can still let admitted streams finish."""
+        guard, limit = 0, self._guard_limit()
+        while self.has_work():
+            if guard >= limit:
+                raise EngineStallError(
+                    f"drain made no progress after {guard} cycles "
+                    f"(limit {limit}): {len(self.pending)} pending")
+            self.step()
+            guard += 1
+
     # ---- paged-pool bookkeeping ------------------------------------------
     def _worst_pages(self, req: Request) -> int:
         return worst_case_pages(len(req.prompt), req.max_new,
@@ -458,10 +616,14 @@ class Engine:
         return self.page_table_dev[:, :n_live]
 
     # ---- one engine cycle -------------------------------------------------
-    def step(self) -> None:
+    def step(self) -> StepReport:
+        """One engine cycle: admit pending prompts (HBB token budget), run
+        one decode quantum, retire finished slots. Returns a
+        :class:`StepReport` so a multi-tier router can measure this
+        engine's per-quantum token throughput without reaching into its
+        private tracker."""
         if not self.fast:
-            self._step_legacy()
-            return
+            return self._step_legacy()
         self._last_admitted = 0
         free = self.free_slots()
         if self.pending and free:
@@ -473,7 +635,7 @@ class Engine:
                 self.cycle_log.append({"admitted": self._last_admitted,
                                        "decoded": 0,
                                        "f": self.tracker.f()})
-            return
+            return StepReport(admitted=self._last_admitted)
         if self.paged:
             self._grant_quantum_pages(active_slots)
             self._push_page_table()
@@ -500,7 +662,8 @@ class Engine:
         # them to the tracker skews the admission f-ratio for many cycles
         # (probe unavailable (-1) → record everything: a slightly skewed f
         # beats a tracker frozen at its prior)
-        if emitted and (n0 < 0 or _jit_cache_size(self._decode_loop) == n0):
+        warm = n0 < 0 or _jit_cache_size(self._decode_loop) == n0
+        if emitted and warm:
             self.tracker.record("decode", emitted, dt)
         if self.paged:
             self.pos_host += msks_h.sum(axis=0)
@@ -517,6 +680,8 @@ class Engine:
                     self._release_slot_pages(i)
         self.cycle_log.append({"admitted": self._last_admitted,
                                "decoded": emitted, "f": self.tracker.f()})
+        return StepReport(admitted=self._last_admitted, decoded=emitted,
+                          dt=dt, warm=warm)
 
     def _admit_pending(self, free: list[int]) -> None:
         """HBB chunking law over token units: the decode quantum is the
@@ -641,7 +806,7 @@ class Engine:
         return page_src
 
     # ---- reference slow path (pre-fast-path engine, kept for baselines) --
-    def _step_legacy(self) -> None:
+    def _step_legacy(self) -> StepReport:
         free = self.free_slots()
         admitted = 0
         if self.pending and free:
@@ -669,16 +834,21 @@ class Engine:
 
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return
+            return StepReport(admitted=admitted)
         toks = np.zeros(self.max_slots, np.int32)
         for i in active:
             toks[i] = self.slot_req[i].out[-1]
         t0 = time.perf_counter()
+        n0 = _jit_cache_size(self._decode)
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(toks),
                                           jnp.asarray(self.pos))
         nxt = np.asarray(jnp.argmax(logits, -1))
-        self.tracker.record("decode", len(active), time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        # compile-tainted intervals must not reach a throughput tracker
+        # (StepReport.warm contract — same probe as the fast path)
+        warm = n0 < 0 or _jit_cache_size(self._decode) == n0
+        self.tracker.record("decode", len(active), dt)
         for i in active:
             req = self.slot_req[i]
             req.out.append(int(nxt[i]))
@@ -689,6 +859,8 @@ class Engine:
                 self.slot_req[i] = None
         self.cycle_log.append({"admitted": admitted, "decoded": len(active),
                                "f": self.tracker.f()})
+        return StepReport(admitted=admitted, decoded=len(active), dt=dt,
+                          warm=warm)
 
     def _guard_limit(self) -> int:
         """Cycle budget proportional to outstanding work: every request

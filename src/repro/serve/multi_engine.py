@@ -1,0 +1,321 @@
+"""Multi-engine heterogeneous serving — the paper's CC/FC pool at request
+granularity.
+
+The paper's core result (§6) is that a dynamic scheduler distributing one
+workload across *all* device classes — CPU cores assisting the FPGA —
+beats pure offload. :class:`MultiEngine` is that scheduler at serving
+granularity: it owns N heterogeneous :class:`~repro.serve.engine.Engine`
+tiers (e.g. a paged-kernel compiled decode tier plus a CPU/interpret tier,
+or big/little model tiers) under ONE shared
+:class:`~repro.core.tracker.ThroughputTracker`, and routes submitted
+requests across them with the same ``proportional_split`` law the HBB
+static/oracle schedulers use — per-tier *measured* tok/s over token-unit
+cost (:mod:`repro.serve.scheduler`).
+
+Mapping onto the paper's two-stage pipeline (Fig. 1):
+
+* **S1 (dispatch)** — each global cycle, the queued requests are split
+  over the tiers in proportion to their effective speeds, capped by each
+  tier's admission capacity (free slots; paged tiers additionally their
+  pool's worst-case commit budget via ``Engine.plan_admission``).
+* **S2 (accounting)** — each tier's :class:`~repro.serve.engine.StepReport`
+  feeds ``(decoded tokens, quantum seconds)`` of warm cycles into the
+  shared tracker, which is what the next S1 round measures speeds from.
+
+Work conservation: a tier that stalls or whose pool exhausts simply has no
+capacity, so its share spills to the live tiers; whatever a tier's own
+admission law could not take this cycle is reclaimed (``take_pending``)
+into the global queue and rerouted next cycle. Queued work is never
+blocked behind a dead tier.
+
+Tiers with ``concurrent=True`` (default) step in parallel threads — the
+serving analogue of the paper's resources running simultaneously; each
+engine is only ever touched by one thread per cycle, engines share the
+(read-only) parameter tree, and the shared tracker is lock-guarded. At
+``temperature=0`` every tier built over the same parameters decodes the
+same greedy stream, so a request's output is independent of the tier that
+served it (asserted by ``tests/test_multi_engine.py`` and BENCH_3).
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.tracker import ThroughputTracker
+from repro.models.model import model_defs
+from repro.serve.engine import (Engine, EngineStallError, PromptTooLongError,
+                                Request, StepReport)
+from repro.serve.scheduler import request_units, route_requests, tier_speeds
+from repro.sharding import params as prm
+from repro.sharding.axes import ShardCtx
+
+
+@dataclass
+class EngineTier:
+    """One resource of the serving pool: an engine plus its routing traits.
+
+    Attributes:
+      name: unique tier label (tracker resource name, routing logs).
+      engine: the :class:`~repro.serve.engine.Engine` serving this tier.
+      kind: tracker classification, ``"accelerator"`` or ``"core"`` —
+        the paper's FC vs CC device classes (reporting only; routing uses
+        measured speeds, not the class).
+      unit_cost: relative cost of one token on this tier (energy, $/hour,
+        contention). Routing divides measured tok/s by it, so a tier twice
+        as expensive earns half the share its raw speed would.
+      prior_tok_s: routing speed assumed until the shared tracker has a
+        warm measurement for this tier (the ``f0`` analogue).
+    """
+    name: str
+    engine: Engine
+    kind: str = "core"
+    unit_cost: float = 1.0
+    prior_tok_s: float = 1.0
+    routed: int = field(default=0, init=False)      # requests sent here
+    decoded: int = field(default=0, init=False)     # tokens emitted here
+
+
+class MultiEngine:
+    """N heterogeneous Engine tiers behind one submit/step/run surface.
+
+    See the module docstring for the scheduling model. Construction
+    validates the pool: at least one tier, unique names, distinct engine
+    objects (an engine donates its cache through its decode loop — sharing
+    one between tiers would alias donated buffers).
+    """
+
+    def __init__(self, tiers: list[EngineTier], *, concurrent: bool = True):
+        if not tiers:
+            raise ValueError("MultiEngine needs at least one tier")
+        names = [t.name for t in tiers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names: {names}")
+        engines = [t.engine for t in tiers]
+        if len({id(e) for e in engines}) != len(engines):
+            raise ValueError("tiers must not share an Engine object (its "
+                             "decode loop donates the cache)")
+        for t in tiers:
+            if t.kind not in ("accelerator", "core"):
+                raise ValueError(f"tier {t.name}: kind must be "
+                                 f"'accelerator' or 'core', got {t.kind!r}")
+            if t.unit_cost <= 0 or t.prior_tok_s <= 0:
+                raise ValueError(f"tier {t.name}: unit_cost and prior_tok_s "
+                                 "must be positive")
+        self.tiers = list(tiers)
+        self.tracker = ThroughputTracker({t.name: t.kind for t in tiers})
+        self.queue: list[Request] = []
+        # rid → tier name, written at routing time. Reporting surface (the
+        # bench and tests read it after run()); entries persist for the
+        # pool's lifetime — a long-lived caller that recycles rids can
+        # clear it between batches.
+        self.assigned: dict[int, str] = {}
+        self.cycle_log: list[dict] = []
+        self.cycles = 0
+        self._pool = (ThreadPoolExecutor(max_workers=len(tiers),
+                                         thread_name_prefix="tier")
+                      if concurrent and len(tiers) > 1 else None)
+
+    # ---- submission ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Queue a request. Raises :class:`PromptTooLongError` only when NO
+        tier can ever hold the prompt — a prompt too long for one tier is
+        simply ineligible there and routes to a longer-context tier."""
+        n = len(req.prompt)
+        if n == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if all(n >= t.engine.max_len for t in self.tiers):
+            raise PromptTooLongError(
+                f"request {req.rid}: prompt of {n} tokens exceeds every "
+                f"tier's max_len "
+                f"({[t.engine.max_len for t in self.tiers]})")
+        self.queue.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(t.engine.has_work()
+                                       for t in self.tiers)
+
+    # ---- S1: route -------------------------------------------------------
+    def _route(self) -> dict[str, int]:
+        """Split the global queue across tiers (proportional_split over
+        measured speeds, capacity- and eligibility-capped) and push each
+        tier's slice into its pending queue. Returns per-tier counts.
+
+        A tier can refuse part of its slice (``plan_admission``: pool
+        cannot commit the worst case). Refused requests mark that tier
+        ineligible for the rest of this cycle and the remainder re-routes
+        immediately — otherwise a pool-exhausted tier that *looks* fast to
+        the proportional law would win the same request every cycle and
+        starve it while other tiers idle (work conservation)."""
+        routed = {t.name: 0 for t in self.tiers}
+        if not self.queue:
+            return routed
+        speeds = tier_speeds(
+            [self.tracker.throughput(t.name) for t in self.tiers],
+            [t.prior_tok_s for t in self.tiers],
+            [t.unit_cost for t in self.tiers])
+        blocked: dict[int, set[int]] = {}       # id(req) → refusing tiers
+        for _ in range(len(self.tiers)):
+            queue = self.queue
+            units = [request_units(len(r.prompt), r.max_new) for r in queue]
+            caps = [max(0, len(t.engine.free_slots()) - len(t.engine.pending))
+                    for t in self.tiers]
+            eligible = [[len(r.prompt) < t.engine.max_len
+                         and i not in blocked.get(id(r), ())
+                         for i, t in enumerate(self.tiers)] for r in queue]
+            assign = route_requests(units, speeds, caps, eligible)
+            taken: set[int] = set()
+            refused = False
+            for i, (tier, idxs) in enumerate(zip(self.tiers, assign)):
+                reqs = [queue[j] for j in idxs]
+                k = tier.engine.plan_admission(reqs)
+                for req in reqs[:k]:
+                    tier.engine.submit(req)
+                    self.assigned[req.rid] = tier.name
+                    tier.routed += 1
+                    routed[tier.name] += 1
+                    taken.add(id(req))
+                for req in reqs[k:]:
+                    blocked.setdefault(id(req), set()).add(i)
+                    refused = True
+            if taken:
+                self.queue = [r for r in self.queue if id(r) not in taken]
+            if not refused or not self.queue:
+                break
+        return routed
+
+    # ---- one global cycle ------------------------------------------------
+    def step(self) -> dict[str, StepReport]:
+        """One pool cycle: route (S1), step every tier with work — in
+        parallel threads when ``concurrent`` — then record warm throughput
+        samples into the shared tracker (S2) and reclaim whatever each
+        tier's own admission law left pending."""
+        # arrival order of this cycle's queue: reclaimed leftovers were
+        # routed from it, so this is enough to restore global FIFO after
+        # they come back (requests submitted directly to a tier's engine
+        # were never in the queue — they join at the tail, stably)
+        order = {id(r): i for i, r in enumerate(self.queue)}
+        routed = self._route()
+        busy = [t for t in self.tiers if t.engine.has_work()]
+        if self._pool is not None and len(busy) > 1:
+            reports = list(self._pool.map(lambda t: t.engine.step(), busy))
+        else:
+            reports = [t.engine.step() for t in busy]
+        out: dict[str, StepReport] = {}
+        for tier, rep in zip(busy, reports):
+            out[tier.name] = rep
+            tier.decoded += rep.decoded
+            if rep.decoded and rep.warm:
+                self.tracker.record(tier.name, rep.decoded, rep.dt)
+            leftovers = tier.engine.take_pending()
+            if leftovers:
+                for req in leftovers:       # back to global, reroutable
+                    # only un-count requests this router actually placed —
+                    # work submitted to the engine directly just joins the
+                    # global queue without touching the tier's stats
+                    if self.assigned.pop(req.rid, None) is not None:
+                        tier.routed -= 1
+                self.queue.extend(leftovers)
+        if self.queue:
+            self.queue.sort(key=lambda r: order.get(id(r), len(order)))
+        self.cycles += 1
+        self.cycle_log.append({
+            "queued": len(self.queue),
+            "routed": routed,
+            "decoded": {t.name: out[t.name].decoded for t in busy},
+        })
+        return out
+
+    # ---- drive to completion ---------------------------------------------
+    def _guard_limit(self) -> int:
+        """Aggregate of the per-engine guard: every request needs ≲ one
+        admission cycle plus max_new/quantum decode cycles; 8× slack."""
+        quantum = min((t.engine.decode_quantum if t.engine.fast else 1)
+                      for t in self.tiers)
+        reqs = list(self.queue)
+        for t in self.tiers:
+            reqs += t.engine.pending
+            reqs += [r for r in t.engine.slot_req if r is not None]
+        tokens = sum(max(1, r.max_new) for r in reqs)
+        return 64 + 8 * (len(reqs) + -(-tokens // quantum))
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve ``requests`` to completion across the pool. Raises
+        :class:`EngineStallError` with per-tier diagnostics if the pool
+        stops making progress (scheduling bug or global starvation)."""
+        for r in requests:
+            self.submit(r)
+        guard, limit = 0, self._guard_limit()
+        while self.has_work():
+            if guard >= limit:
+                raise EngineStallError(
+                    f"multi-engine made no progress after {guard} cycles "
+                    f"(limit {limit}): {len(self.queue)} queued; "
+                    + "; ".join(self._tier_diag(t) for t in self.tiers))
+            self.step()
+            guard += 1
+        return requests
+
+    def drain(self) -> None:
+        """Finish all admitted and queued work without new submissions."""
+        self.run([])
+
+    def _tier_diag(self, tier: EngineTier) -> str:
+        eng = tier.engine
+        busy = sum(1 for r in eng.slot_req if r is not None)
+        d = (f"{tier.name}: {len(eng.pending)} pending, {busy}/"
+             f"{eng.max_slots} slots busy")
+        if eng.paged:
+            d += f", {len(eng.alloc.free)} pages free"
+        return d
+
+    # ---- reporting -------------------------------------------------------
+    def stats(self) -> dict:
+        """Aggregated completion/throughput report across tiers."""
+        snap = self.tracker.snapshot()
+        tiers = {}
+        for t in self.tiers:
+            s = snap[t.name]
+            tiers[t.name] = {
+                "kind": t.kind,
+                "routed": t.routed,
+                "decoded": t.decoded,
+                "tok_s": s.ewma_thr,
+                "busy_time": s.busy_time,
+                "unit_cost": t.unit_cost,
+            }
+        return {"cycles": self.cycles, "queued": len(self.queue),
+                "tiers": tiers}
+
+
+def make_multi_engine(cfg: ModelConfig, ctx: ShardCtx,
+                      tier_kws: list[dict], *, seed: int = 0,
+                      concurrent: bool = True, **shared_kw) -> MultiEngine:
+    """Build a tier pool over ONE shared parameter set.
+
+    Each dict in ``tier_kws`` holds that tier's Engine kwargs plus the
+    optional routing keys ``name`` / ``kind`` / ``unit_cost`` /
+    ``prior_tok_s``; ``shared_kw`` is merged under every tier (tier keys
+    win). Sharing the materialized parameters is what makes the tiers
+    token-equivalent at ``temperature=0`` — and costs one copy of the
+    model, not N.
+
+        meng = make_multi_engine(cfg, ctx, [
+            {"name": "dense"},
+            {"name": "paged", "paged": True, "page_size": 8},
+        ], max_slots=4, max_len=128)
+    """
+    params = prm.materialize(model_defs(cfg), jax.random.PRNGKey(seed))
+    tiers = []
+    for i, kw in enumerate(tier_kws):
+        kw = {**shared_kw, **kw}
+        name = kw.pop("name", f"tier{i}")
+        kind = kw.pop("kind", "core")
+        unit_cost = kw.pop("unit_cost", 1.0)
+        prior = kw.pop("prior_tok_s", 1.0)
+        tiers.append(EngineTier(name, Engine(cfg, params, ctx, **kw),
+                                kind=kind, unit_cost=unit_cost,
+                                prior_tok_s=prior))
+    return MultiEngine(tiers, concurrent=concurrent)

@@ -1,0 +1,56 @@
+"""Docs link checker: every relative link in the repo's markdown resolves.
+
+    python tools/check_docs.py [files...]
+
+With no arguments, checks all tracked *.md at the repo root plus docs/.
+External links (http/https/mailto) and pure anchors (#...) are skipped;
+`path#anchor` links are checked for the path only. Exits non-zero listing
+every broken link, so CI fails when a doc rename orphans a reference.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:")
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    errors = []
+    for m in LINK.finditer(md.read_text()):
+        target = m.group(1)
+        if target.startswith(SKIP) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = Path(__file__).resolve().parent.parent
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = sorted(root.glob("*.md")) + sorted(root.glob("docs/**/*.md"))
+    missing = [str(f) for f in files if not f.exists()]
+    if missing:
+        print("\n".join(f"no such file: {f}" for f in missing))
+        return 1
+    errors = []
+    for f in files:
+        errors += check_file(f, root)
+    if errors:
+        print("\n".join(errors))
+        return 1
+    print(f"checked {len(files)} markdown files, all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
