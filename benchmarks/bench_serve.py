@@ -40,6 +40,14 @@ whose live-page width follows the resident long contexts, while the pool
 keeps shorts on the cheap tier and routes by measured per-tier tok/s
 (proportional_split). Token streams stay equivalent to a single engine at
 temperature=0.
+
+PR 5 adds the speculative-decode comparison (BENCH_4.json): a big/little
+pair — an 8-layer softened target and its first layer as the draft
+(`models/draft.py`) — vs. the SAME target serving alone, at k ∈ {2,4,8}
+greedy plus acceptance-by-temperature at k=4. The win is structural: k
+cheap draft steps plus ONE batched (k+1)-position verify replace up to
+k+1 serial target steps, so it shows even on the serializing CPU smoke
+box; greedy streams are asserted token-identical to target-only.
 """
 from __future__ import annotations
 
@@ -351,6 +359,132 @@ def write_bench3_json(mt: list[dict],
     Path(path).write_text(json.dumps(doc, indent=2) + "\n")
 
 
+# ------------------------------------------------- speculative decode (PR 5)
+SPEC_KS = (2, 4, 8)
+SPEC_TEMPS = (0.0, 0.5, 1.0)
+SPEC_TARGET_LAYERS = 8
+SPEC_ALPHA = 0.2
+
+
+def spec_decode_rows(*, arch: str = "mistral-nemo-12b", max_new: int = 40,
+                     decode_quantum: int = 4, reps: int = 3,
+                     seed: int = 0) -> dict:
+    """Speculative big/little decode vs. target-only (BENCH_4).
+
+    The pair is built the honest way for a smoke box (DESIGN.md §7): the
+    target is an `SPEC_TARGET_LAYERS`-deep GQA model whose deep-layer
+    residual contributions are softened (`soften_deep_layers`,
+    ×SPEC_ALPHA on layers ≥ 1), the draft is its first layer
+    (`draft_from_target` — shared embeddings, so vocab-aligned by
+    construction). The softened target IS the model both rows serve, so
+    the comparison is apples-to-apples: the speedup is structural (k
+    draft steps at ~1/8 cost + one batched K-position verify replace up
+    to k+1 serial target steps), not a model downgrade, and the
+    greedy streams must be token-identical. Greedy rows at k ∈ SPEC_KS;
+    acceptance-by-temperature at k=4 shows the rate the router's effective
+    tok/s scales by. One engine per row, reused across best-of-`reps`
+    timed passes after a compile-absorbing warmup run."""
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.models.draft import draft_from_target, soften_deep_layers
+    from repro.models.model import model_defs
+    from repro.serve.engine import Engine, Request
+    from repro.sharding import params as prm
+    from repro.sharding.axes import single_device_ctx
+    import dataclasses
+
+    cfg = dataclasses.replace(smoke_config(get_config(arch)),
+                              n_layers=SPEC_TARGET_LAYERS)
+    ctx = single_device_ctx()
+    params = prm.materialize(model_defs(cfg), jax.random.PRNGKey(seed))
+    params = soften_deep_layers(cfg, params, 1, SPEC_ALPHA)
+    dcfg, dparams = draft_from_target(cfg, params, 1)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, int(n)).tolist()
+               for n in (5, 9, 11, 14, 7, 12)]        # one 16-token bucket
+
+    def bench(**kw):
+        eng = Engine(cfg, params, ctx, max_slots=4, max_len=MAX_LEN,
+                     decode_quantum=decode_quantum, **kw)
+
+        def mk(rep):
+            return [Request(rid=1000 * rep + i, prompt=list(p),
+                            max_new=max_new) for i, p in enumerate(prompts)]
+        eng.run(mk(99))                               # absorb compiles
+        a0, p0 = eng.spec_accepted, eng.spec_proposed
+        best, outs, tok, done = float("inf"), None, 0, True
+        for rep in range(max(1, reps)):
+            reqs = mk(rep)
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            best = min(best, time.perf_counter() - t0)
+            outs = [r.out for r in reqs]
+            tok = sum(len(r.out) for r in reqs)
+            done = done and all(r.done for r in reqs)
+        prop = eng.spec_proposed - p0
+        return {
+            "tok": tok, "dt": best, "tok_s": tok / best,
+            "acceptance": ((eng.spec_accepted - a0) / prop if prop else 0.0),
+            "outs": outs, "all_done": done,
+        }
+
+    base = bench()
+    rows = []
+    for k in SPEC_KS:
+        r = bench(draft_cfg=dcfg, draft_params=dparams, spec_k=k)
+        r.update(mode=f"spec_k{k}", spec_k=k,
+                 speedup=r["tok_s"] / max(base["tok_s"], 1e-9),
+                 token_equiv=r.pop("outs") == base["outs"])
+        rows.append(r)
+    accept_by_t = {}
+    for t in SPEC_TEMPS:
+        if t == 0.0:
+            accept_by_t["0.0"] = rows[SPEC_KS.index(4)]["acceptance"]
+            continue
+        r = bench(draft_cfg=dcfg, draft_params=dparams, spec_k=4,
+                  temperature=t, sample_seed=seed)
+        accept_by_t[str(t)] = r["acceptance"]
+    base["mode"] = "target_only"
+    base.pop("outs")
+    return {"arch": arch, "base": base, "rows": rows,
+            "acceptance_by_temperature": accept_by_t}
+
+
+def spec_csv_rows(sp: dict) -> list[str]:
+    """Harness-contract rows for speculative decode (BENCH_4)."""
+    lines = []
+    for r in [sp["base"]] + sp["rows"]:
+        us = r["dt"] / max(r["tok"], 1) * 1e6
+        lines.append(f"serve/{r['mode']}/tok_s,{us:.0f},{r['tok_s']:.1f}")
+    k4 = next(r for r in sp["rows"] if r["spec_k"] == 4)
+    lines.append(f"serve/spec_k4_vs_target_only,0,{k4['speedup']:.2f}")
+    lines.append(f"serve/spec_k4/acceptance,0,{k4['acceptance']:.3f}")
+    equiv = all(r["token_equiv"] for r in sp["rows"])
+    lines.append(f"serve/spec/token_equiv,0,{int(equiv)}")
+    return lines
+
+
+def write_bench4_json(sp: dict, path: str | Path = "BENCH_4.json") -> None:
+    """PR 5 perf artifact: speculative decode vs target-only."""
+    k4 = next(r for r in sp["rows"] if r["spec_k"] == 4)
+    doc = {
+        "bench": "speculative_decode",
+        "arch": sp["arch"] + f" (smoke, {SPEC_TARGET_LAYERS} layers, deep "
+                             f"residuals ×{SPEC_ALPHA})",
+        "draft": "first target layer, shared embeddings",
+        "target_only_tok_s": sp["base"]["tok_s"],
+        "rows": [{k: v for k, v in r.items() if k != "outs"}
+                 for r in sp["rows"]],
+        "speedup_k4": k4["speedup"],
+        "acceptance_by_temperature": sp["acceptance_by_temperature"],
+        "token_equiv": all(r["token_equiv"] for r in sp["rows"]),
+        "all_done": bool(sp["base"]["all_done"]
+                         and all(r["all_done"] for r in sp["rows"])),
+    }
+    Path(path).write_text(json.dumps(doc, indent=2) + "\n")
+
+
 def rows(**kw) -> list[dict]:
     fast = serve_once("fast", **kw)
     legacy = serve_once("legacy", **kw)
@@ -459,6 +593,7 @@ def main() -> None:
     kern = kernel_rows()
     long_row = long_ctx_row()
     mt = multi_tier_rows()
+    sp = spec_decode_rows()
     fast, legacy = out
     dense, paged = mem
     print("name,us_per_call,derived")
@@ -468,9 +603,12 @@ def main() -> None:
         print(line)
     for line in multi_csv_rows(mt):
         print(line)
+    for line in spec_csv_rows(sp):
+        print(line)
     write_bench_json(out, mem)
     write_bench2_json(kern, long_row)
     write_bench3_json(mt)
+    write_bench4_json(sp)
     print(f"# fast: {fast['tok']} tok in {fast['dt']:.2f}s "
           f"({fast['tok_s']:.1f} tok/s), {fast['prefill_compiles']} prefill "
           f"compiles for {fast['distinct_prompt_lens']} distinct lengths, "
@@ -514,6 +652,17 @@ def main() -> None:
         "multi-tier greedy streams must match the single engine")
     assert mt[0]["tok_s_vs_best_single"] > 1.0, (
         "tier pool must beat the best single tier on the mixed workload")
+    k4 = next(r for r in sp["rows"] if r["spec_k"] == 4)
+    print(f"# spec decode: target-only {sp['base']['tok_s']:.1f} tok/s; "
+          + ", ".join(f"k={r['spec_k']}: {r['tok_s']:.1f} "
+                      f"({r['speedup']:.2f}×, acc {r['acceptance']:.2f})"
+                      for r in sp["rows"])
+          + f"; acceptance by temperature {sp['acceptance_by_temperature']}")
+    assert all(r["all_done"] for r in sp["rows"]) and sp["base"]["all_done"]
+    assert all(r["token_equiv"] for r in sp["rows"]), (
+        "greedy speculative streams must match target-only decode")
+    assert k4["speedup"] > 1.3, (
+        f"spec_k=4 must beat target-only by >1.3× (got {k4['speedup']:.2f})")
 
 
 if __name__ == "__main__":

@@ -105,6 +105,17 @@ def main() -> None:
     except Exception as e:  # multi-tier bench must not sink the driver
         print(f"serve/multi_tier_unavailable,0,0  # {e}")
 
+    # --- Speculative big/little decode (PR 5) ------------------------------
+    try:
+        from benchmarks.bench_serve import (spec_csv_rows, spec_decode_rows,
+                                            write_bench4_json)
+        sp = spec_decode_rows()
+        for line in spec_csv_rows(sp):
+            print(line)
+        write_bench4_json(sp)
+    except Exception as e:  # spec bench must not sink the driver
+        print(f"serve/spec_decode_unavailable,0,0  # {e}")
+
     # --- Roofline summary (from dry-run artifacts, if present) ------------
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

@@ -1,0 +1,99 @@
+"""Big/little draft-model helpers for speculative decoding.
+
+Speculative decoding (DESIGN.md §7) needs a *draft* model that (a) shares
+the target's tokenizer/vocab, (b) is much cheaper per step, and (c) agrees
+with the target often enough that verification accepts long prefixes. The
+canonical way to get such a pair without training anything is **layer
+truncation**: the draft is the target's first ``n_layers`` blocks plus the
+target's own embed / final-norm / unembed, so early-layer representations —
+which already carry most next-token information — drive the proposals.
+
+``draft_from_target`` builds exactly that pair by slicing the stacked layer
+leaves, sharing (not copying) the embedding tables. ``soften_deep_layers``
+is the benchmark-side complement: it damps the *residual contributions* of
+the deep layers (everything the draft does not have) by scaling their
+output projections, which raises draft/target agreement to a realistic
+high-acceptance regime while keeping the two models genuinely different.
+Both helpers require a *uniform* layer stack (one schedule segment with a
+single-block pattern) — truncating a hybrid/periodic schedule would change
+which block kind sits at each depth, silently breaking alignment, so we
+refuse instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import layer_schedule
+
+
+def _uniform_stack(cfg: ModelConfig):
+    """The single stacked segment of a uniform decoder, or raise."""
+    if cfg.enc_dec:
+        raise ValueError(f"{cfg.name}: draft truncation is decoder-only")
+    segs = layer_schedule(cfg)
+    if len(segs) != 1 or len(segs[0].pattern) != 1:
+        raise ValueError(
+            f"{cfg.name}: draft truncation needs a uniform layer stack "
+            f"(got {len(segs)} segments); build the draft params explicitly "
+            "for periodic/hybrid schedules")
+    return segs[0]
+
+
+def draft_from_target(cfg: ModelConfig, params, n_layers: int,
+                      *, name: str | None = None):
+    """(draft_cfg, draft_params): the target's first ``n_layers`` blocks.
+
+    The draft shares the target's embed table, final norm and unembed
+    *by reference* (no copies — they are the same arrays), so the pair is
+    vocab-aligned by construction, as `Engine(draft_cfg=…)` requires.
+    """
+    seg = _uniform_stack(cfg)
+    if not 1 <= n_layers < cfg.n_layers:
+        raise ValueError(f"draft n_layers {n_layers} must be in "
+                         f"[1, {cfg.n_layers})")
+    draft_cfg = dataclasses.replace(
+        cfg, name=name or f"{cfg.name}-draft{n_layers}", n_layers=n_layers)
+    dsegs = layer_schedule(draft_cfg)
+    if len(dsegs) != 1 or dsegs[0].pattern != seg.pattern:
+        raise ValueError(f"{cfg.name}: truncated schedule is not a prefix "
+                         "of the target schedule")
+    blocks = [jax.tree.map(lambda x: x[:n_layers], params["blocks"][0])]
+    dparams = {"embed": params["embed"], "blocks": blocks,
+               "final_norm": params["final_norm"],
+               "unembed": params["unembed"]}
+    return draft_cfg, dparams
+
+
+def soften_deep_layers(cfg: ModelConfig, params, n_keep: int,
+                       alpha: float = 0.25):
+    """Scale the residual output projections of layers ≥ ``n_keep``.
+
+    Every block writes into the residual stream through exactly two
+    projections — the attention output ``wo`` and the MLP ``w_down`` —
+    so scaling those by ``alpha`` damps the deep layers' contribution
+    without touching their inputs. With ``alpha`` well below 1 the
+    first ``n_keep`` layers dominate the logits, so a draft built from
+    them (``draft_from_target``) agrees with this softened target at a
+    high-but-imperfect rate: the regime speculative decoding is for.
+    Returns a new params tree; the input is unchanged.
+    """
+    _uniform_stack(cfg)
+    if not 0 < n_keep <= cfg.n_layers:
+        raise ValueError(f"n_keep {n_keep} out of range")
+
+    def scale(path, x):
+        leaf = path[-1]
+        key = getattr(leaf, "key", getattr(leaf, "name", None))
+        if key not in ("wo", "w_down"):
+            return x
+        deep = jnp.arange(x.shape[0]) >= n_keep
+        mask = deep.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(mask, (x.astype(jnp.float32) * alpha).astype(x.dtype),
+                         x)
+
+    blocks = [jax.tree_util.tree_map_with_path(scale, params["blocks"][0])]
+    return {**params, "blocks": blocks}

@@ -406,23 +406,49 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, ctx: ShardCtx,
 
 
 # ------------------------------------------------------ fused decode loop
-def _sample_tokens(logits, key, *, temperature: float, top_k: int):
-    """Next-token choice on device. `temperature` is a *static* float:
-    0 → greedy argmax (no PRNG consumed, HLO identical to the PR 1 loop);
-    > 0 → temperature-scaled (optionally top-k-truncated) categorical."""
-    if not temperature:
-        return jnp.argmax(logits, -1).astype(jnp.int32)
+def _filter_logits(logits, *, temperature: float, top_k: int,
+                   top_p: float = 0.0):
+    """Temperature / top-k / nucleus (top-p) filtering → f32 logits ready
+    for `jax.random.categorical` (truncated entries at NEG). All three
+    knobs are *static* Python floats/ints: `temperature` must be > 0 here
+    (greedy never builds a distribution), and top_p in {0, 1.0} — nucleus
+    off — adds no HLO at all, so a top_p=1.0 sampler traces to the exact
+    same jaxpr as the pre-nucleus sampler."""
     lg = logits.astype(F32) / temperature
     if top_k:
-        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]        # (B, 1)
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]        # (…, 1)
         lg = jnp.where(lg < kth, NEG, lg)
+    if top_p and top_p < 1.0:
+        probs = jax.nn.softmax(lg, axis=-1)
+        srt = jnp.sort(probs, axis=-1)[..., ::-1]          # descending
+        csum = jnp.cumsum(srt, axis=-1)
+        # smallest prefix whose mass reaches top_p; (csum - srt) is the mass
+        # *before* each entry, so the count is always ≥ 1 (never empty)
+        n_keep = jnp.sum((csum - srt < top_p).astype(jnp.int32),
+                         axis=-1, keepdims=True)
+        thr = jnp.take_along_axis(srt, n_keep - 1, axis=-1)
+        lg = jnp.where(probs < thr, NEG, lg)
+    return lg
+
+
+def _sample_tokens(logits, key, *, temperature: float, top_k: int,
+                   top_p: float = 0.0):
+    """Next-token choice on device. `temperature` is a *static* float:
+    0 → greedy argmax (no PRNG consumed, HLO identical to the PR 1 loop);
+    > 0 → temperature-scaled (optionally top-k / top-p truncated)
+    categorical."""
+    if not temperature:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    lg = _filter_logits(logits, temperature=temperature, top_k=top_k,
+                        top_p=top_p)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
 
 
 def decode_loop(cfg: ModelConfig, params, cache, tokens, pos, active,
                 remaining, ctx: ShardCtx, *, num_steps: int, eos_id: int,
                 max_len: int, page_table=None, paged_kernel=True,
-                temperature: float = 0.0, top_k: int = 0, rng=None):
+                temperature: float = 0.0, top_k: int = 0,
+                top_p: float = 0.0, rng=None):
     """Multi-token decode fused into one device program.
 
     Wraps `decode_step` in a `jax.lax.scan` over a quantum of `num_steps`
@@ -458,7 +484,7 @@ def decode_loop(cfg: ModelConfig, params, cache, tokens, pos, active,
         else:
             sub = key
         nxt = _sample_tokens(logits, sub, temperature=temperature,
-                             top_k=top_k)
+                             top_k=top_k, top_p=top_p)
         emit_tok = jnp.where(active, nxt, -1)
         remaining = remaining - active.astype(remaining.dtype)
         pos = pos + active.astype(pos.dtype)
@@ -472,10 +498,613 @@ def decode_loop(cfg: ModelConfig, params, cache, tokens, pos, active,
     return carry, toks, msks
 
 
+# ------------------------------------------------- speculative decode (§7)
+def _merge_partials(o1, m1, l1, o2, m2, l2):
+    """Online-softmax merge of two shard-local (o, m, l) partial triples.
+    Both inputs are *unnormalized* (o = Σ e^{s-m}·v, l = Σ e^{s-m});
+    `_combine` still runs once across the model axis afterwards."""
+    m = jnp.maximum(m1, m2)
+    m_safe = jnp.where(m <= NEG / 2, 0.0, m)
+    c1 = jnp.exp(jnp.where(m1 <= NEG / 2, NEG, m1) - m_safe)
+    c2 = jnp.exp(jnp.where(m2 <= NEG / 2, NEG, m2) - m_safe)
+    o = o1 * c1[..., None] + o2 * c2[..., None]
+    l = l1 * c1 + l2 * c2
+    return o, m, l
+
+
+def flash_verify_gqa(q, k_new, v_new, ck, cv, pos0, *, window: int,
+                     scale: float, softcap: float, ctx: ShardCtx,
+                     page_table=None, paged_kernel=True):
+    """Batched K-token verify attention for speculative decode.
+
+    q (B,K,Hkv,G,dh); k_new/v_new (B,K,Hkv,dh) the *staged* K/V rows for
+    positions pos0..pos0+K-1; ck/cv the cache exactly as the last commit
+    left it; pos0 (B,) the write position of verify input 0. → out
+    (B,K,Hkv,G,dh). The cache is READ-ONLY here — query j (absolute
+    position pos0+j) attends committed history (< pos0) plus staged rows
+    j' ≤ j (self included), which reproduces the serial loop's
+    write-then-attend semantics without mutating rows a rejected proposal
+    would corrupt; `commit_rows` writes the accepted prefix afterwards.
+    Staged scores are contributed by shard 0 only (every shard holds the
+    full staged rows — adding them everywhere would double-count in the
+    psum). Sliding-window layers require K ≤ window so every staged row
+    stays inside every query's window; ring slots are anchored at the last
+    committed position pos0-1."""
+    mesh = ctx.mesh
+    K = q.shape[1]
+    if window and K > window:
+        raise ValueError(f"verify block K={K} exceeds window={window}")
+    bp = ctx.spec(("batch", None, None, None, None), q.shape)[0]
+    qspec = P(bp, None, None, None, None)
+    nspec = P(bp, None, None, None)
+    pspec = P(bp)
+    msize = ctx.axis_size("model")
+    causal = jnp.arange(K)[:, None] >= jnp.arange(K)[None, :]   # (Kq, Kk)
+
+    def _staged_partials(qf, kn, vn, i):
+        # qf f32·scale (B,K,Hkv,G,dh); kn/vn (B,K,Hkv,dh)
+        s = jnp.einsum("bkhgd,bjhd->bhgkj", qf, kn.astype(F32))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        keep = jnp.logical_and(i == 0, causal)[None, None, None]
+        s = jnp.where(keep, s, NEG)
+        m = jnp.max(s, -1)
+        m_safe = jnp.where(m <= NEG / 2, 0.0, m)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(keep, p, 0.0)
+        o = jnp.einsum("bhgkj,bjhd->bhgkd", p, vn.astype(F32))
+        return o, m, jnp.sum(p, -1)
+
+    if page_table is not None:
+        _check_paged_args(page_table, pos0, window=window)
+        poolspec = ctx.spec((None, "kv_seq", "kv_heads", None), ck.shape)
+        ptspec = P(bp, None)
+        impl = _paged_impl(paged_kernel)
+
+        def local_paged(q, kn, vn, pk, pv, pos0, pt):
+            i = jax.lax.axis_index("model")
+            B, K, hkv, grp, dh = q.shape
+            qf = q.reshape(B * K, hkv, grp, dh)
+            # committed history only: kernel validity is gpos ≤ pos, so
+            # pass pos0-1 for every query (there is always a prefilled
+            # prompt, so pos0 ≥ 1 whenever the slot's output is consumed)
+            posf = jnp.repeat(pos0 - 1, K, axis=0)
+            ptf = jnp.repeat(pt, K, axis=0)
+            o, m, l = paged_ops.paged_attend_gqa(
+                qf, pk, pv, ptf, posf, i, msize, scale=scale,
+                softcap=softcap, impl=impl)
+            o = jnp.moveaxis(o.reshape(B, K, hkv, grp, dh), 1, 3)
+            m = jnp.moveaxis(m.reshape(B, K, hkv, grp), 1, 3)
+            l = jnp.moveaxis(l.reshape(B, K, hkv, grp), 1, 3)
+            o2, m2, l2 = _staged_partials(q.astype(F32) * scale, kn, vn, i)
+            out = _combine(*_merge_partials(o, m, l, o2, m2, l2))
+            return jnp.moveaxis(out, 3, 1).astype(q.dtype)
+
+        fn = shard_map(local_paged, mesh=mesh,
+                       in_specs=(qspec, nspec, nspec, poolspec, poolspec,
+                                 pspec, ptspec),
+                       out_specs=qspec, check_rep=False)
+        return fn(q, k_new, v_new, ck, cv, pos0, page_table)
+
+    cspec = ctx.spec(("batch", "kv_seq", "kv_heads", None), ck.shape)
+
+    def local(q, kn, vn, ck, cv, pos0):
+        i = jax.lax.axis_index("model")
+        B, S_loc = ck.shape[0], ck.shape[1]
+        S_tot = S_loc * msize
+        gpos = i * S_loc + jnp.arange(S_loc)
+        qpos = pos0[:, None] + jnp.arange(K)[None]              # (B, K)
+        if window:
+            # ring content is anchored at the last *committed* position:
+            # slot j holds p_j = (pos0-1) - ((pos0-1 - j) mod S_tot); the
+            # staged rows cover pos0..pos0+K-1 and K ≤ window keeps them
+            # all in-window for every query
+            anchor = pos0[:, None] - 1
+            p_j = anchor - ((anchor - gpos[None]) % S_tot)       # (B, S_loc)
+            valid = (p_j >= 0)[:, None, :] & \
+                (p_j[:, None, :] > qpos[:, :, None] - window)    # (B,K,S_loc)
+        else:
+            valid = jnp.broadcast_to(
+                (gpos[None] < pos0[:, None])[:, None, :], (B, K, S_loc))
+        qf = q.astype(F32) * scale
+        s = jnp.einsum("bkhgd,bshd->bhgks", qf, ck.astype(F32))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(valid[:, None, None], s, NEG)
+        m = jnp.max(s, -1)
+        m_safe = jnp.where(m <= NEG / 2, 0.0, m)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[:, None, None], p, 0.0)
+        o = jnp.einsum("bhgks,bshd->bhgkd", p, cv.astype(F32))
+        l = jnp.sum(p, -1)
+        o2, m2, l2 = _staged_partials(qf, kn, vn, i)
+        out = _combine(*_merge_partials(o, m, l, o2, m2, l2))
+        return jnp.moveaxis(out, 3, 1).astype(q.dtype)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(qspec, nspec, nspec, cspec, cspec, pspec),
+                   out_specs=qspec, check_rep=False)
+    return fn(q, k_new, v_new, ck, cv, pos0)
+
+
+def flash_verify_mla(q_eff, new_rows, ckv, pos0, *, kv_lora: int,
+                     scale: float, ctx: ShardCtx, page_table=None,
+                     paged_kernel=True):
+    """MLA analogue of `flash_verify_gqa`: q_eff (B,K,H,R); new_rows
+    (B,K,R) the staged latent rows; ckv (B,Sc,R) or the (N,ps,R) pool. →
+    out (B,K,H,kv_lora). Read-only; full-attention only (typed check)."""
+    mesh = ctx.mesh
+    K = q_eff.shape[1]
+    bp = ctx.spec(("batch", None, None, None), q_eff.shape)[0]
+    qspec = P(bp, None, None, None)
+    nspec = P(bp, None, None)
+    pspec = P(bp)
+    msize = ctx.axis_size("model")
+    causal = jnp.arange(K)[:, None] >= jnp.arange(K)[None, :]
+
+    def _staged_partials(qf, rows, i):
+        # qf f32·scale (B,K,H,R); rows (B,K,R)
+        s = jnp.einsum("bkhr,bjr->bhkj", qf, rows.astype(F32))
+        keep = jnp.logical_and(i == 0, causal)[None, None]
+        s = jnp.where(keep, s, NEG)
+        m = jnp.max(s, -1)
+        m_safe = jnp.where(m <= NEG / 2, 0.0, m)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(keep, p, 0.0)
+        o = jnp.einsum("bhkj,bjr->bhkr", p, rows[..., :kv_lora].astype(F32))
+        return o, m, jnp.sum(p, -1)
+
+    if page_table is not None:
+        _check_paged_args(page_table, pos0)
+        poolspec = ctx.spec((None, "kv_seq", None), ckv.shape)
+        ptspec = P(bp, None)
+        impl = _paged_impl(paged_kernel)
+
+        def local_paged(q, rows, pool, pos0, pt):
+            i = jax.lax.axis_index("model")
+            B, K, H, R = q.shape
+            qf = q.reshape(B * K, H, R)
+            posf = jnp.repeat(pos0 - 1, K, axis=0)
+            ptf = jnp.repeat(pt, K, axis=0)
+            o, m, l = paged_ops.paged_attend_mla(
+                qf, pool, ptf, posf, i, msize, kv_lora=kv_lora,
+                scale=scale, impl=impl)
+            o = jnp.moveaxis(o.reshape(B, K, H, kv_lora), 1, 2)
+            m = jnp.moveaxis(m.reshape(B, K, H), 1, 2)
+            l = jnp.moveaxis(l.reshape(B, K, H), 1, 2)
+            o2, m2, l2 = _staged_partials(q.astype(F32) * scale, rows, i)
+            out = _combine(*_merge_partials(o, m, l, o2, m2, l2))
+            return jnp.moveaxis(out, 2, 1).astype(q.dtype)
+
+        fn = shard_map(local_paged, mesh=mesh,
+                       in_specs=(qspec, nspec, poolspec, pspec, ptspec),
+                       out_specs=qspec, check_rep=False)
+        return fn(q_eff, new_rows, ckv, pos0, page_table)
+
+    cspec = ctx.spec(("batch", "kv_seq", None), ckv.shape)
+
+    def local(q, rows, ckv, pos0):
+        i = jax.lax.axis_index("model")
+        S_loc = ckv.shape[1]
+        gpos = i * S_loc + jnp.arange(S_loc)
+        valid = gpos[None] < pos0[:, None]                      # (B, S_loc)
+        qf = q.astype(F32) * scale
+        s = jnp.einsum("bkhr,bsr->bhks", qf, ckv.astype(F32))
+        s = jnp.where(valid[:, None, None], s, NEG)
+        m = jnp.max(s, -1)
+        m_safe = jnp.where(m <= NEG / 2, 0.0, m)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[:, None, None], p, 0.0)
+        o = jnp.einsum("bhks,bsr->bhkr", p, ckv[..., :kv_lora].astype(F32))
+        l = jnp.sum(p, -1)
+        o2, m2, l2 = _staged_partials(qf, rows, i)
+        out = _combine(*_merge_partials(o, m, l, o2, m2, l2))
+        return jnp.moveaxis(out, 2, 1).astype(q.dtype)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(qspec, nspec, cspec, pspec),
+                   out_specs=qspec, check_rep=False)
+    return fn(q_eff, new_rows, ckv, pos0)
+
+
+def gqa_verify(cfg: ModelConfig, p, x, cache, pos0, window, ctx: ShardCtx,
+               page_table=None, paged_kernel=True):
+    """x (B,K,D) → (out (B,K,D), staged {"k","v"} rows (B,K,Hkv,dh))."""
+    B, K = x.shape[:2]
+    q = jnp.einsum("bkd,dhe->bkhe", x, p["wq"])
+    k = jnp.einsum("bkd,dhe->bkhe", x, p["wk"])
+    v = jnp.einsum("bkd,dhe->bkhe", x, p["wv"])
+    if cfg.use_rope:
+        qpos = pos0[:, None] + jnp.arange(K)[None]
+        cos, sin = rope_tables(qpos, cfg.head_dim, cfg.rope_theta)  # (B,K,·)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, K, cfg.n_kv_heads, G, cfg.head_dim)
+    out = flash_verify_gqa(qg, k, v, cache["k"], cache["v"], pos0,
+                           window=window, scale=cfg.head_dim ** -0.5,
+                           softcap=cfg.attn_softcap, ctx=ctx,
+                           page_table=page_table, paged_kernel=paged_kernel)
+    out = out.reshape(B, K, cfg.n_heads * cfg.head_dim)
+    o = jnp.einsum("bke,ed->bkd", out, p["wo"].reshape(-1, cfg.d_model))
+    staged = {"k": k.astype(cache["k"].dtype),
+              "v": v.astype(cache["v"].dtype)}
+    return ctx.constrain(o, ("batch", None, None)), staged
+
+
+def mla_verify(cfg: ModelConfig, p, x, cache, pos0, ctx: ShardCtx,
+               page_table=None, paged_kernel=True):
+    """x (B,K,D) → (out (B,K,D), staged {"ckv"} latent rows (B,K,R))."""
+    m = cfg.mla
+    cq = rmsnorm(jnp.einsum("bkd,dr->bkr", x, p["wdq"]), p["q_norm"],
+                 cfg.norm_eps)
+    q = jnp.einsum("bkr,rhe->bkhe", cq, p["wuq"])
+    qn, qr = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    qpos = pos0[:, None] + jnp.arange(x.shape[1])[None]
+    cos, sin = rope_tables(qpos, m.rope_dim, cfg.rope_theta)   # (B,K,·)
+    qr = apply_rope(qr, cos, sin)
+    wuk = p["wukv"][..., :m.nope_dim]                  # (R, H, nope)
+    q_c = jnp.einsum("bkhn,rhn->bkhr", qn, wuk)
+    q_eff = jnp.concatenate([q_c, qr], axis=-1)
+    ckv_t = rmsnorm(jnp.einsum("bkd,dr->bkr", x, p["wdkv"]), p["kv_norm"],
+                    cfg.norm_eps)
+    kr_t = jnp.einsum("bkd,dr->bkr", x, p["wkr"])
+    kr_t = apply_rope(kr_t[:, :, None], cos, sin)[:, :, 0]
+    rows = jnp.concatenate([ckv_t, kr_t], axis=-1).astype(cache["ckv"].dtype)
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+    o_c = flash_verify_mla(q_eff, rows, cache["ckv"], pos0,
+                           kv_lora=m.kv_lora, scale=scale, ctx=ctx,
+                           page_table=page_table, paged_kernel=paged_kernel)
+    wuv = p["wukv"][..., m.nope_dim:]                  # (R, H, v)
+    o = jnp.einsum("bkhr,rhv->bkhv", o_c, wuv)
+    o = jnp.einsum("bkhv,hvd->bkd", o, p["wo"])
+    return ctx.constrain(o, ("batch", None, None)), {"ckv": rows}
+
+
+def block_verify(cfg: ModelConfig, bc, p, cache, h, pos0, ctx: ShardCtx,
+                 page_table=None, paged_kernel=True):
+    """h (B,K,D) → (h', staged). Attention layers stage their K new
+    K/V rows; mamba layers scan the single-token step over the K inputs
+    and stage the K intermediate states (SSMs are inherently serial —
+    verify only batches the attention/FFN work)."""
+    x = rmsnorm(h, p["norm1"], cfg.norm_eps)
+    if bc.mixer == "attn":
+        pt = None if bc.window else page_table
+        if cfg.mla:
+            y, staged = mla_verify(cfg, p["attn"], x, cache, pos0, ctx,
+                                   page_table=pt, paged_kernel=paged_kernel)
+        else:
+            y, staged = gqa_verify(cfg, p["attn"], x, cache, pos0,
+                                   bc.window, ctx, page_table=pt,
+                                   paged_kernel=paged_kernel)
+    else:
+        step = (mamba_mod.mamba2_step if cfg.ssm.version == 2
+                else mamba_mod.mamba1_step)
+
+        def sbody(state, xt):
+            yt, nstate = step(cfg, p["mamba"], xt, state, ctx)
+            return nstate, (yt, nstate)
+
+        _, (ys, states) = jax.lax.scan(sbody, cache, jnp.moveaxis(x, 1, 0))
+        y = jnp.moveaxis(ys, 0, 1)
+        staged = states                                # leaves (K, B, …)
+    if cfg.use_post_norm:
+        y = rmsnorm(y, p["post1"], cfg.norm_eps)
+    h = h + y
+    if bc.ffn != "none":
+        x = rmsnorm(h, p["norm2"], cfg.norm_eps)
+        if bc.ffn == "moe":
+            B, K, D = x.shape
+            y = moe_mod.moe_decode(cfg, p["moe"], x.reshape(B * K, D),
+                                   ctx).reshape(B, K, D)
+        else:
+            y = mlp(cfg, p["mlp"], x, ctx)
+        if cfg.use_post_norm:
+            y = rmsnorm(y, p["post2"], cfg.norm_eps)
+        h = h + y
+    return h, staged
+
+
+def decode_verify(cfg: ModelConfig, params, cache, tokens, pos0,
+                  ctx: ShardCtx, page_table=None, paged_kernel=True):
+    """Speculative verify pass. tokens (B,K) = [last committed token,
+    proposals g_1..g_{K-1}]; pos0 (B,) the write position of tokens[:,0].
+    → (logits (B,K,V) f32, staged tree). logits[:, j] is the target's
+    next-token distribution after consuming tokens[:, :j+1] — exactly what
+    K serial `decode_step`s would produce, in one batched pass. The cache
+    is read-only; `decode_commit` writes the accepted prefix."""
+    segments = layer_schedule(cfg)
+    h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.pdtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    h = ctx.constrain(h, ("batch", None, None))
+    staged_blocks = []
+    for seg, sp, sc in zip(segments, params["blocks"], cache["blocks"]):
+
+        def body(hc, xs, seg=seg):
+            slot_params, slot_cache = xs
+            stg = {}
+            for j, bc in enumerate(seg.pattern):
+                hc, s = block_verify(cfg, bc, slot_params[f"s{j}"],
+                                     slot_cache[f"s{j}"], hc, pos0, ctx,
+                                     page_table=page_table,
+                                     paged_kernel=paged_kernel)
+                stg[f"s{j}"] = s
+            return hc, stg
+
+        h, stg = jax.lax.scan(body, h, (sp, sc))
+        staged_blocks.append(stg)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"]["table"].T if cfg.tie_embeddings
+         else params["unembed"]["w"])
+    logits = jnp.einsum("bkd,dv->bkv", h, w.astype(h.dtype),
+                        preferred_element_type=F32)
+    logits = _softcap(logits, cfg.final_softcap)
+    logits = ctx.constrain(logits, ("batch", None, "vocab"))
+    return logits, {"blocks": staged_blocks}
+
+
+# -------------------------------------------------- multi-token KV commit
+def commit_rows(cache, rows, pos0, n, ctx: ShardCtx, *, window: int = 0,
+                axes, page_table=None):
+    """Write the accepted prefix of staged `rows` (B,K,…) into one
+    attention cache leaf: row j lands at absolute position pos0+j for
+    j < n (B,). Dense leaves use the same shard-local masked writes as the
+    serial loop (ring addressing for windows); paged leaves route each row
+    through the page table, with rejected rows (j ≥ n) deflected to the
+    trash page 0 exactly like a frozen slot's scribble. `axes` is the
+    leaf's logical-axis tuple (the caller knows the layout)."""
+    mesh = ctx.mesh
+    K = rows.shape[1]
+    msize = ctx.axis_size("model")
+    bp = ctx.spec(("batch",) + (None,) * (rows.ndim - 1), rows.shape)[0]
+    rspec = P(*((bp,) + (None,) * (rows.ndim - 1)))
+    pspec = P(bp)
+
+    if page_table is not None:
+        _check_paged_args(page_table, pos0, window=window)
+        poolspec = ctx.spec(axes, cache.shape)
+        ptspec = P(bp, None)
+
+        def local(pool, rows, pt, pos0, n):
+            i = jax.lax.axis_index("model")
+            T, ps = pt.shape[1], pool.shape[1] * msize
+            for j in range(K):
+                # rejected rows route to the trash page (pos ≥ T·ps)
+                pos = jnp.where(j < n, pos0 + j, T * ps)
+                pool = _paged_write(pool, rows[:, j], pt, pos, i, msize)
+            return pool
+
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(poolspec, rspec, ptspec, pspec, pspec),
+                       out_specs=poolspec, check_rep=False)
+        return fn(cache, rows, page_table, pos0, n)
+
+    cspec = ctx.spec(axes, cache.shape)
+
+    def local(cache, rows, pos0, n):
+        i = jax.lax.axis_index("model")
+        S_loc = cache.shape[1]
+        S_tot = S_loc * msize
+        for j in range(K):
+            pos = pos0 + j
+            wpos = pos % S_tot if window else pos
+            rel = jnp.where(j < n, wpos - i * S_loc, -1)
+            cache = _local_write(cache, rows[:, j], rel)
+        return cache
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(cspec, rspec, pspec, pspec),
+                   out_specs=cspec, check_rep=False)
+    return fn(cache, rows, pos0, n)
+
+
+def _commit_scan_state(cache, states, n):
+    """Mamba leaves: `states` (K,B,…) are the K post-step states staged by
+    `block_verify`; keep state n-1 per batch row (n = 0 → the pre-verify
+    state, i.e. nothing advanced)."""
+    def sel(c, s):
+        full = jnp.concatenate([c[None], s.astype(c.dtype)], axis=0)
+        return full[n, jnp.arange(c.shape[0])]
+    return jax.tree.map(sel, cache, states)
+
+
+def block_commit(cfg: ModelConfig, bc, cache, staged, pos0, n,
+                 ctx: ShardCtx, page_table=None):
+    if bc.mixer != "attn":
+        return _commit_scan_state(cache, staged, n)
+    pt = None if bc.window else page_table
+    if cfg.mla:
+        axes = ((None, "kv_seq", None) if pt is not None
+                else ("batch", "kv_seq", None))
+        return {"ckv": commit_rows(cache["ckv"], staged["ckv"], pos0, n,
+                                   ctx, window=bc.window, axes=axes,
+                                   page_table=pt)}
+    axes = ((None, "kv_seq", "kv_heads", None) if pt is not None
+            else ("batch", "kv_seq", "kv_heads", None))
+    return {"k": commit_rows(cache["k"], staged["k"], pos0, n, ctx,
+                             window=bc.window, axes=axes, page_table=pt),
+            "v": commit_rows(cache["v"], staged["v"], pos0, n, ctx,
+                             window=bc.window, axes=axes, page_table=pt)}
+
+
+def decode_commit(cfg: ModelConfig, cache, staged, pos0, n, ctx: ShardCtx,
+                  page_table=None):
+    """Commit half of the verify/commit split: write the first n (B,)
+    staged rows/states into the cache. Positions pos0..pos0+n-1 receive
+    the K/V of the accepted verify *inputs*; the correction token is NOT
+    written — it becomes the next round's tokens[:,0] and its row is
+    staged (and committed) by the next verify."""
+    new_blocks = []
+    for seg, sc, st in zip(layer_schedule(cfg), cache["blocks"],
+                           staged["blocks"]):
+
+        def body(c, xs, seg=seg):
+            slot_cache, slot_staged = xs
+            out = {}
+            for j, bc in enumerate(seg.pattern):
+                out[f"s{j}"] = block_commit(cfg, bc, slot_cache[f"s{j}"],
+                                            slot_staged[f"s{j}"], pos0, n,
+                                            ctx, page_table=page_table)
+            return c, out
+
+        _, new_sc = jax.lax.scan(body, 0, (sc, st))
+        new_blocks.append(new_sc)
+    return {"blocks": new_blocks}
+
+
+# --------------------------------------------- acceptance / emission law
+def spec_candidates(proposals, corrections, accept, active, remaining,
+                    pos0, *, eos_id: int, max_len: int):
+    """The pure emission law of one speculative round (unit-testable).
+
+    proposals (B,k): draft tokens g_1..g_k. corrections (B,k+1): the
+    target's fallback token at each acceptance depth (argmax in greedy
+    mode, residual/bonus sample otherwise; index k is the bonus). accept
+    (B,k): per-proposal verifier verdicts. active/remaining/pos0 (B,): the
+    slot state entering the round.
+
+    Returns (cand (B,K), emit (B,K) bool, n (B,), m (B,)) with K = k+1:
+    m = accepted prefix length = Σ cumprod(accept); cand[j] = g_{j+1} for
+    j < m else corrections[m]; emit marks the emitted prefix after EOS /
+    token-budget / max_len truncation — exactly the prefix the serial loop
+    would have emitted over its next n = emit.sum() steps (the still-active
+    law `active & (remaining>0) & (tok≠eos) & (pos<max_len-1)` applied
+    cumulatively), which is what makes greedy spec-decode token-identical
+    to target-only decoding."""
+    B, k = proposals.shape
+    K = k + 1
+    m = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+    x = jnp.take_along_axis(corrections, m[:, None], axis=1)[:, 0]
+    g_pad = jnp.concatenate(
+        [proposals, jnp.zeros((B, 1), proposals.dtype)], axis=1)
+    jj = jnp.arange(K)[None]
+    cand = jnp.where(jj < m[:, None], g_pad, x[:, None])
+    prev = jnp.concatenate(
+        [jnp.full((B, 1), -1, cand.dtype), cand[:, :-1]], axis=1)
+    cond = (jj <= m[:, None]) & (prev != eos_id) & \
+        (remaining[:, None] > jj) & (pos0[:, None] + jj < max_len - 1)
+    # the first token is the serial loop's unconditional step: an active
+    # slot always emits at least one token per round
+    cond = jnp.concatenate([jnp.ones((B, 1), bool), cond[:, 1:]], axis=1)
+    emit = active[:, None] & (jnp.cumprod(cond.astype(jnp.int32), 1) > 0)
+    n = jnp.sum(emit.astype(jnp.int32), axis=1)
+    return cand, emit, n, m
+
+
+def spec_decode_loop(cfg: ModelConfig, draft_cfg: ModelConfig, params,
+                     draft_params, cache, draft_cache, tokens, pos, active,
+                     remaining, ctx: ShardCtx, *, spec_k: int,
+                     num_steps: int, eos_id: int, max_len: int,
+                     page_table=None, paged_kernel=True,
+                     temperature: float = 0.0, top_k: int = 0,
+                     top_p: float = 0.0, rng=None):
+    """Speculative decode quantum: each scan step runs `spec_k` serial
+    draft steps plus ONE batched target verify, emitting up to spec_k+1
+    tokens per slot per round.
+
+    Greedy (temperature=0): a proposal is accepted iff it equals the
+    target argmax at its depth and corrections are target argmaxes, so the
+    emitted stream is token-identical to the serial loop. Sampled:
+    Leviathan/Chen rejection sampling against the *processed*
+    (temperature/top-k/top-p) distributions p and q — accept g with
+    probability min(1, p(g)/q(g)), on rejection at depth i resample from
+    the residual norm(max(p_i - q_i, 0)), and after k acceptances draw the
+    bonus token from p_k — which preserves the target-only sampling law.
+
+    The draft writes its dense cache optimistically at pos..pos+k-1; rows
+    beyond the accepted prefix are stale, but the draft is validated to be
+    full-attention/dense-only (validity gpos ≤ pos), so a stale row is
+    always overwritten by the next round's step at that position before it
+    ever becomes attendable. The target cache is never written by verify;
+    `decode_commit` writes exactly the accepted prefix.
+
+    Returns ((caches, tokens, pos, active, remaining, rng), toks, msks,
+    acc) where caches = {"tgt", "dft"}, toks/msks are (num_steps, K, B) in
+    emission order and acc (num_steps, B) counts accepted proposals."""
+    K = spec_k + 1
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+
+    def body(carry, _):
+        tcache, dcache, tokens, pos, active, remaining, key = carry
+
+        def dbody(dc, _):
+            dcache, dtok, dpos, dkey = dc
+            dlogits, dcache = decode_step(draft_cfg, draft_params, dcache,
+                                          dtok, dpos, ctx)
+            if temperature:
+                dkey, sub = jax.random.split(dkey)
+                fl = _filter_logits(dlogits, temperature=temperature,
+                                    top_k=top_k, top_p=top_p)
+                g = jax.random.categorical(sub, fl, -1).astype(jnp.int32)
+                q = jax.nn.softmax(fl, axis=-1)
+            else:
+                g = jnp.argmax(dlogits, -1).astype(jnp.int32)
+                q = jnp.zeros((dlogits.shape[0], 0), F32)      # unused
+            return (dcache, g, dpos + 1, dkey), (g, q)
+
+        (dcache, _, _, key), (g, qp) = jax.lax.scan(
+            dbody, (dcache, tokens, pos, key), None, length=spec_k)
+        gT = jnp.moveaxis(g, 0, 1)                             # (B, k)
+
+        vt = jnp.concatenate([tokens[:, None], gT], axis=1)    # (B, K)
+        logits, staged = decode_verify(cfg, params, tcache, vt, pos, ctx,
+                                       page_table=page_table,
+                                       paged_kernel=paged_kernel)
+
+        if temperature:
+            key, k_acc, k_res = jax.random.split(key, 3)
+            fl = _filter_logits(logits, temperature=temperature,
+                                top_k=top_k, top_p=top_p)
+            pp = jax.nn.softmax(fl, axis=-1)                   # (B, K, V)
+            qT = jnp.moveaxis(qp, 0, 1)                        # (B, k, V)
+            p_at = jnp.take_along_axis(pp[:, :spec_k], gT[..., None],
+                                       axis=-1)[..., 0]
+            q_at = jnp.take_along_axis(qT, gT[..., None], axis=-1)[..., 0]
+            u = jax.random.uniform(k_acc, gT.shape, F32)
+            accept = u * q_at < p_at           # u < p/q without the divide
+            r = jnp.maximum(pp[:, :spec_k] - qT, 0.0)
+            rsum = jnp.sum(r, -1, keepdims=True)
+            r = jnp.where(rsum > 0.0, r, pp[:, :spec_k])   # p ≡ q → use p
+            resid = jnp.concatenate([r, pp[:, spec_k:]], axis=1)
+            corrections = jax.random.categorical(
+                k_res, jnp.log(resid + 1e-30), axis=-1).astype(jnp.int32)
+        else:
+            corrections = jnp.argmax(logits, -1).astype(jnp.int32)
+            accept = gT == corrections[:, :spec_k]
+
+        cand, emit, n, m = spec_candidates(gT, corrections, accept, active,
+                                           remaining, pos, eos_id=eos_id,
+                                           max_len=max_len)
+        tcache = decode_commit(cfg, tcache, staged, pos, n, ctx,
+                               page_table=page_table)
+        emit_tok = jnp.where(emit, cand, -1)
+        remaining = remaining - n.astype(remaining.dtype)
+        pos = pos + n.astype(pos.dtype)
+        last = jnp.take_along_axis(cand, jnp.maximum(n - 1, 0)[:, None],
+                                   axis=1)[:, 0]
+        still = active & (remaining > 0) & (last != eos_id) & \
+            (pos < max_len - 1)
+        tokens = jnp.where(still, last, tokens)
+        acc = jnp.where(active, m, 0).astype(jnp.int32)
+        carry = (tcache, dcache, tokens, pos, still, remaining, key)
+        return carry, (emit_tok.T, emit.T, acc)
+
+    carry = (cache, draft_cache, tokens, pos, active, remaining, rng)
+    carry, (toks, msks, acc) = jax.lax.scan(body, carry, None,
+                                            length=num_steps)
+    tcache, dcache, tokens, pos, active, remaining, key = carry
+    carry = ({"tgt": tcache, "dft": dcache}, tokens, pos, active,
+             remaining, key)
+    return carry, toks, msks, acc
+
+
 def decode_loop_fn(cfg: ModelConfig, ctx: ShardCtx, *, num_steps: int,
                    eos_id: int, max_len: int, paged: bool = False,
                    paged_kernel=True, temperature: float = 0.0,
-                   top_k: int = 0):
+                   top_k: int = 0, top_p: float = 0.0,
+                   draft_cfg: ModelConfig | None = None, spec_k: int = 0):
     """Engine-facing closure, shaped for jit(donate_argnums=(1,…,6)).
 
     Returns (carry, packed) where `packed` is one (2·num_steps + 1, B) int32
@@ -485,7 +1114,50 @@ def decode_loop_fn(cfg: ModelConfig, ctx: ShardCtx, *, num_steps: int,
     is carry slot 5, donated and device-resident like the rest. In paged
     mode the loop takes the (B,T) page table as a trailing, non-donated
     arg; the engine passes only the table's *live* prefix (bucketed), which
-    is what lets the kernel path skip dead pages wholesale."""
+    is what lets the kernel path skip dead pages wholesale.
+
+    `draft_cfg` + `spec_k` switch the quantum to the speculative loop:
+    `params`/`cache` become {"tgt", "dft"} trees, each round emits up to
+    spec_k+1 tokens, and `packed` grows to
+    (2·num_steps·(spec_k+1) + num_steps + 1, B) — emitted tokens, emission
+    masks (both round-major in emission order), per-round accepted-proposal
+    counts, then `active`. Still exactly ONE host fetch per quantum."""
+
+    if draft_cfg is not None:
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1 with a draft, got "
+                             f"{spec_k}")
+        NK = num_steps * (spec_k + 1)
+
+        def _pack_spec(carry, toks, msks, acc):
+            active = carry[3]
+            B = active.shape[0]
+            return carry, jnp.concatenate(
+                [toks.reshape(NK, B), msks.astype(jnp.int32).reshape(NK, B),
+                 acc, active[None].astype(jnp.int32)], axis=0)
+
+        if paged:
+            def loop(params, cache, tokens, pos, active, remaining, rng,
+                     page_table):
+                carry, toks, msks, acc = spec_decode_loop(
+                    cfg, draft_cfg, params["tgt"], params["dft"],
+                    cache["tgt"], cache["dft"], tokens, pos, active,
+                    remaining, ctx, spec_k=spec_k, num_steps=num_steps,
+                    eos_id=eos_id, max_len=max_len, page_table=page_table,
+                    paged_kernel=paged_kernel, temperature=temperature,
+                    top_k=top_k, top_p=top_p, rng=rng)
+                return _pack_spec(carry, toks, msks, acc)
+            return loop
+
+        def loop(params, cache, tokens, pos, active, remaining, rng):
+            carry, toks, msks, acc = spec_decode_loop(
+                cfg, draft_cfg, params["tgt"], params["dft"],
+                cache["tgt"], cache["dft"], tokens, pos, active,
+                remaining, ctx, spec_k=spec_k, num_steps=num_steps,
+                eos_id=eos_id, max_len=max_len, paged_kernel=paged_kernel,
+                temperature=temperature, top_k=top_k, top_p=top_p, rng=rng)
+            return _pack_spec(carry, toks, msks, acc)
+        return loop
 
     def _pack(carry, toks, msks):
         active = carry[3]
@@ -500,7 +1172,7 @@ def decode_loop_fn(cfg: ModelConfig, ctx: ShardCtx, *, num_steps: int,
                 cfg, params, cache, tokens, pos, active, remaining, ctx,
                 num_steps=num_steps, eos_id=eos_id, max_len=max_len,
                 page_table=page_table, paged_kernel=paged_kernel,
-                temperature=temperature, top_k=top_k, rng=rng)
+                temperature=temperature, top_k=top_k, top_p=top_p, rng=rng)
             return _pack(carry, toks, msks)
         return loop
 
@@ -508,7 +1180,7 @@ def decode_loop_fn(cfg: ModelConfig, ctx: ShardCtx, *, num_steps: int,
         carry, toks, msks = decode_loop(
             cfg, params, cache, tokens, pos, active, remaining, ctx,
             num_steps=num_steps, eos_id=eos_id, max_len=max_len,
-            temperature=temperature, top_k=top_k, rng=rng)
+            temperature=temperature, top_k=top_k, top_p=top_p, rng=rng)
         return _pack(carry, toks, msks)
 
     return loop

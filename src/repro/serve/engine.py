@@ -36,8 +36,20 @@ implementation at full table width — the PR 2 cost model — as the escape
 hatch.
 
 Sampling: `temperature=0` (default) is greedy argmax; `temperature>0`
-enables on-device temperature/top-k categorical sampling with the PRNG key
-carried through the decode scan (still exactly one host sync per quantum).
+enables on-device temperature/top-k/top-p categorical sampling with the
+PRNG key carried through the decode scan (still exactly one host sync per
+quantum).
+
+Speculative decoding (`draft_cfg=` + `spec_k=`; DESIGN.md §7): a little
+draft model proposes spec_k tokens per round inside the decode quantum and
+the big target verifies all spec_k+1 positions in ONE batched pass —
+the model-level analogue of the paper's little-cores-assist-big-accelerator
+split. Greedy traffic is token-identical to target-only decoding; sampled
+traffic is distribution-preserving (rejection sampling). The engine carries
+a combined {"tgt", "dft"} cache, accounts *accepted* tokens per quantum
+(`StepReport.accepted/proposed`), and its measured tok/s is therefore
+acceptance-scaled — exactly the effective-throughput signal the
+multi-tier routing law wants.
 
 `fast=False` keeps the original per-token / per-prompt reference path; the
 benchmark (benchmarks/bench_serve.py) and the equivalence tests in
@@ -141,17 +153,27 @@ class StepReport:
 
     Attributes:
       admitted: requests moved from pending into slots this cycle.
-      decoded: decode tokens emitted across all slots this cycle.
+      decoded: decode tokens *emitted* across all slots this cycle. For a
+        speculative engine one scan round can emit up to spec_k+1 tokens;
+        `decoded` counts emissions (acceptance-scaled), never rounds, so
+        `decoded / dt` is the *effective* tok/s the routing law should see
+        and multi-token steps cannot inflate it.
       dt: wall seconds of the decode quantum dispatch (device interval;
         host-side bookkeeping excluded).
       warm: False when the quantum triggered a fresh XLA compile — such
         intervals measure the compiler, not the tier, and must not be fed
         to a throughput tracker.
+      accepted: draft proposals the target verifier accepted this cycle
+        (0 for non-speculative engines).
+      proposed: draft proposals made this cycle (spec_k per active round);
+        accepted/proposed is the acceptance rate.
     """
     admitted: int = 0
     decoded: int = 0
     dt: float = 0.0
     warm: bool = True
+    accepted: int = 0
+    proposed: int = 0
 
 
 def _jit_cache_size(fn) -> int:
@@ -234,7 +256,9 @@ class Engine:
                  paged: bool = False, page_size: int = 16,
                  num_pages: int | None = None, paged_kernel=True,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0):
+                 top_p: float = 0.0, sample_seed: int = 0,
+                 draft_cfg: ModelConfig | None = None, draft_params=None,
+                 spec_k: int = 0):
         """Build a serving engine over an existing parameter tree.
 
         Args:
@@ -279,7 +303,22 @@ class Engine:
             decode scan carry — still one host sync per quantum).
           top_k: truncate sampling to the k most likely tokens (0: off;
             1 collapses to greedy regardless of seed).
+          top_p: nucleus sampling — truncate to the smallest token set
+            whose probability mass reaches top_p (0 or 1.0: off, and
+            traces to the identical jaxpr as the pre-nucleus sampler).
           sample_seed: PRNG seed for sampling; same seed → same streams.
+          draft_cfg: little proposal model for speculative decoding
+            (None: off). Must be decoder-only, full-attention with no
+            sliding window (its dense cache is written optimistically and
+            stale rows must stay invalid until overwritten), and share the
+            target's vocab. Requires ``fast=True``.
+          draft_params: the draft's parameter tree; None materializes
+            fresh ones from ``draft_cfg`` (tests / toy tiers —
+            ``models/draft.py`` builds an aligned big/little pair from the
+            target's own weights).
+          spec_k: draft proposals per verify round (≥ 1 with a draft).
+            Each decode-scan round emits between 1 and spec_k+1 tokens;
+            greedy output is token-identical to ``spec_k=0`` serving.
         """
         assert not cfg.enc_dec, "enc-dec serving uses whisper_decode_step"
         self.cfg, self.params, self.ctx = cfg, params, ctx
@@ -294,7 +333,47 @@ class Engine:
         if temperature and not fast:
             raise ValueError("sampling (temperature > 0) requires fast=True "
                              "— the legacy reference path is greedy only")
+        if not 0.0 <= top_p <= 1.0:
+            raise ValueError(f"top_p must be in [0, 1], got {top_p}")
         self.temperature, self.top_k = float(temperature), int(top_k)
+        self.top_p = float(top_p)
+        # ---- speculative decode (draft/verify) validation ----------------
+        self._spec = draft_cfg is not None
+        if spec_k and not self._spec:
+            raise ValueError("spec_k requires a draft_cfg")
+        self.spec_k = int(spec_k)
+        self.draft_cfg = draft_cfg
+        self.tokens_per_step = (self.spec_k + 1) if self._spec else 1
+        if self._spec:
+            if not fast:
+                raise ValueError("speculative decode requires fast=True")
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1 with a draft, got "
+                                 f"{spec_k}")
+            if draft_cfg.enc_dec:
+                raise ValueError("draft must be decoder-only")
+            if draft_cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab} != target vocab "
+                    f"{cfg.vocab} — proposals must be target token ids")
+            for seg in layer_schedule(draft_cfg):
+                for bc in seg.pattern:
+                    if bc.mixer != "attn" or bc.window:
+                        raise ValueError(
+                            "draft must be full-attention with no sliding "
+                            "window: its cache rows are written "
+                            "optimistically, which is only sound when "
+                            "validity is gpos <= pos on a dense cache")
+            windows = [bc.window for seg in layer_schedule(cfg)
+                       for bc in seg.pattern
+                       if bc.mixer == "attn" and bc.window]
+            if windows and min(windows) < spec_k + 1:
+                raise ValueError(
+                    f"spec_k+1 = {spec_k + 1} verify rows exceed the "
+                    f"target's smallest window {min(windows)} — staged "
+                    f"rows must all be in-window for every verify query")
+        self.spec_accepted = 0                 # lifetime acceptance counters
+        self.spec_proposed = 0
         if isinstance(paged_kernel, (bool, int)):
             paged_kernel = bool(paged_kernel)   # 0/1 → canonical bools
         elif paged_kernel not in paged_ops._IMPLS:
@@ -342,6 +421,12 @@ class Engine:
             self.pos_host = np.zeros(max_slots, np.int64)  # device-pos mirror
         else:
             cache_d = cache_defs(cfg, max_slots, max_len, msize)
+        if self._spec:
+            # combined tree: the draft always serves from a dense cache
+            # (optimistic writes are only sound there — see above)
+            cache_d = {"tgt": cache_d,
+                       "dft": cache_defs(draft_cfg, max_slots, max_len,
+                                         msize)}
         # place the cache on the mesh up front: the donated decode loop
         # emits mesh-sharded leaves, and a fresh SingleDeviceSharding cache
         # would make every admit bucket compile twice (once per sharding).
@@ -356,6 +441,17 @@ class Engine:
             self.cache = jax.tree.map(jax.device_put, self.cache,
                                       prm.shardings(cache_d, ctx))
         self.kinds = cache_kinds(cfg, paged=self.paged)
+        if self._spec:
+            if draft_params is None:
+                draft_params = prm.materialize(model_defs(draft_cfg),
+                                               jax.random.PRNGKey(0))
+            self.draft_params = draft_params
+            self.kinds = {"tgt": self.kinds,
+                          "dft": cache_kinds(draft_cfg, paged=False)}
+            self._loop_params = {"tgt": params, "dft": draft_params}
+        else:
+            self.draft_params = None
+            self._loop_params = params
         self.pos = np.zeros(max_slots, np.int32)       # legacy-path mirror
         self.slot_req: list[Optional[Request]] = [None] * max_slots
         self.pending: list[Request] = []
@@ -387,7 +483,9 @@ class Engine:
             decode_loop_fn(cfg, ctx, num_steps=self.decode_quantum,
                            eos_id=eos_id, max_len=max_len, paged=self.paged,
                            paged_kernel=self.paged_kernel,
-                           temperature=self.temperature, top_k=self.top_k),
+                           temperature=self.temperature, top_k=self.top_k,
+                           top_p=self.top_p, draft_cfg=draft_cfg,
+                           spec_k=self.spec_k),
             donate_argnums=(1, 2, 3, 4, 5, 6))
         self._prefill_fast = jax.jit(self._prefill_fast_impl)
         self._admit = jax.jit(
@@ -407,13 +505,21 @@ class Engine:
         """(P,Sb) padded prompts → (first sampled token (P,), batched
         cache). Sampling (greedy at temperature=0) happens on device so
         admission never ships logits home — the first token of a stream
-        follows the same temperature/top-k law as the decode loop."""
-        logits, cache = prefill(self.cfg, params, toks, self.ctx,
+        follows the same temperature/top-k/top-p law as the decode loop.
+        Speculative engines prefill the draft too (its logits are unused;
+        only its cache matters) and return the combined tree."""
+        tp = params["tgt"] if self._spec else params
+        logits, cache = prefill(self.cfg, tp, toks, self.ctx,
                                 max_len=self.max_len, prompt_len=prompt_len,
                                 page_size=(self.page_size if self.paged
                                            else None))
+        if self._spec:
+            _, dcache = prefill(self.draft_cfg, params["dft"], toks,
+                                self.ctx, max_len=self.max_len,
+                                prompt_len=prompt_len)
+            cache = {"tgt": cache, "dft": dcache}
         first = _sample_tokens(logits, key, temperature=self.temperature,
-                               top_k=self.top_k)
+                               top_k=self.top_k, top_p=self.top_p)
         return first, cache
 
     def _admit_state(self, tokens, pos, active, remaining, hit, idx,
@@ -569,16 +675,24 @@ class Engine:
             guard += 1
 
     # ---- paged-pool bookkeeping ------------------------------------------
+    @property
+    def quantum_tokens(self) -> int:
+        """Most tokens one decode quantum can advance a slot: every scan
+        round emits up to ``tokens_per_step`` (1, or spec_k+1 for a
+        speculative engine). Page grants and the live-table slice budget
+        this worst case — acceptance below 100% just leaves slack."""
+        return self.decode_quantum * self.tokens_per_step
+
     def _worst_pages(self, req: Request) -> int:
         return worst_case_pages(len(req.prompt), req.max_new,
-                                self.decode_quantum, self.max_len,
+                                self.quantum_tokens, self.max_len,
                                 self.page_size)
 
     def _grant_quantum_pages(self, active_slots: list[int]) -> None:
         """Pre-grant every occupied slot enough pages to cover the coming
         quantum, so the decode loop never needs a device-side allocator."""
         for i in active_slots:
-            end = min(int(self.pos_host[i]) + self.decode_quantum,
+            end = min(int(self.pos_host[i]) + self.quantum_tokens,
                       self.max_len)
             target = -(-end // self.page_size)
             if target > self.alloc.count[i]:
@@ -607,7 +721,7 @@ class Engine:
         range guard."""
         if not self.paged_kernel:
             return self.page_table_dev
-        end = max(min(int(self.pos_host[i]) + self.decode_quantum,
+        end = max(min(int(self.pos_host[i]) + self.quantum_tokens,
                       self.max_len) for i in active_slots)
         n_live = max(-(-end // self.page_size), 8)
         n_live = min(self.pages_per_slot, 1 << (n_live - 1).bit_length())
@@ -641,8 +755,9 @@ class Engine:
             self._push_page_table()
         t0 = time.perf_counter()
         n0 = _jit_cache_size(self._decode_loop)
-        args = (self.params, self.cache, self.tokens_dev, self.pos_dev,
-                self.active_dev, self.remaining_dev, self.rng_dev)
+        args = (self._loop_params, self.cache, self.tokens_dev,
+                self.pos_dev, self.active_dev, self.remaining_dev,
+                self.rng_dev)
         if self.paged:
             carry, packed = self._decode_loop(
                 *args, self._live_page_table(active_slots))
@@ -654,20 +769,35 @@ class Engine:
         dt = time.perf_counter() - t0
         self.quanta += 1
         N = self.decode_quantum
-        toks_h = packed_h[:N]
-        msks_h = packed_h[N:2 * N].astype(bool)
-        act_h = packed_h[2 * N].astype(bool)
+        # a speculative round can emit up to tokens_per_step tokens, so the
+        # packed array carries N·K emission rows (round-major, in order)
+        NK = N * self.tokens_per_step
+        toks_h = packed_h[:NK]
+        msks_h = packed_h[NK:2 * NK].astype(bool)
+        act_h = packed_h[-1].astype(bool)
         emitted = int(msks_h.sum())
+        accepted = proposed = 0
+        if self._spec:
+            accepted = int(packed_h[2 * NK:2 * NK + N].sum())
+            # emission row 0 of each round is exactly "active at round
+            # start" — each active round made spec_k proposals
+            rounds = int(msks_h.reshape(
+                N, self.tokens_per_step, -1)[:, 0, :].sum())
+            proposed = self.spec_k * rounds
+            self.spec_accepted += accepted
+            self.spec_proposed += proposed
         # quanta that just compiled don't measure decode speed — feeding
         # them to the tracker skews the admission f-ratio for many cycles
         # (probe unavailable (-1) → record everything: a slightly skewed f
         # beats a tracker frozen at its prior)
         warm = n0 < 0 or _jit_cache_size(self._decode_loop) == n0
         if emitted and warm:
+            # `emitted` counts accepted emissions, never rounds — so this
+            # is acceptance-scaled *effective* tok/s (the routing signal)
             self.tracker.record("decode", emitted, dt)
         if self.paged:
             self.pos_host += msks_h.sum(axis=0)
-        for q in range(N):
+        for q in range(NK):
             row = msks_h[q]
             for i in active_slots:
                 if row[i]:
@@ -681,7 +811,8 @@ class Engine:
         self.cycle_log.append({"admitted": self._last_admitted,
                                "decoded": emitted, "f": self.tracker.f()})
         return StepReport(admitted=self._last_admitted, decoded=emitted,
-                          dt=dt, warm=warm)
+                          dt=dt, warm=warm, accepted=accepted,
+                          proposed=proposed)
 
     def _admit_pending(self, free: list[int]) -> None:
         """HBB chunking law over token units: the decode quantum is the
@@ -690,7 +821,7 @@ class Engine:
         engines additionally stop at the pool's worst-case page budget
         (admission backpressure instead of a mid-quantum page fault)."""
         r_tokens = sum(len(q.prompt) for q in self.pending)
-        budget = cpu_chunk(S_f=self.decode_quantum * self.max_slots,
+        budget = cpu_chunk(S_f=self.quantum_tokens * self.max_slots,
                            f=self.tracker.f(), r=r_tokens, n_cores=1)
         take: list[Request] = []
         planned_pages = 0
@@ -759,7 +890,8 @@ class Engine:
         p0 = _jit_cache_size(self._prefill_fast)
         a0 = _jit_cache_size(self._admit)
         self._prefill_rng, sub = jax.random.split(self._prefill_rng)
-        first, new_cache = self._prefill_fast(self.params, jnp.asarray(toks),
+        first, new_cache = self._prefill_fast(self._loop_params,
+                                              jnp.asarray(toks),
                                               jnp.asarray(pl), sub)
         (self.cache, self.tokens_dev, self.pos_dev, self.active_dev,
          self.remaining_dev) = self._admit(

@@ -21,6 +21,18 @@ Ring (sliding-window) and mamba leaves keep their dense / O(1) layouts —
 they are already bounded per slot. The in-page offset dim carries the
 `kv_seq` logical axis, so each model shard owns a fixed sub-range of every
 page and the flash-decode exact-softmax combine is unchanged.
+
+Speculative decoding (DESIGN.md §7) layers two conventions on top without
+new layouts. (1) A spec engine's cache tree is ``{"tgt": <target cache>,
+"dft": <draft cache>}`` — the target side is dense or paged exactly as
+above, the draft side is always dense (the draft must be full-attention,
+its K/V budget is the same `max_len`, and it never shares pages with the
+target). (2) The multi-token verify commit writes up to k+1 rows per slot
+per round; rejected rows are deflected to **trash page 0** (the same page
+every masked single-token write already lands in), so the invariant the
+allocator and the property tests rely on is unchanged: live pages
+(index ≥ 1) only ever receive accepted tokens, and page 0 absorbs
+everything else.
 """
 from __future__ import annotations
 

@@ -35,6 +35,15 @@ engine is only ever touched by one thread per cycle, engines share the
 ``temperature=0`` every tier built over the same parameters decodes the
 same greedy stream, so a request's output is independent of the tier that
 served it (asserted by ``tests/test_multi_engine.py`` and BENCH_3).
+
+Speculative big/little tiers (DESIGN.md §7) compose under the same law
+with no scheduler changes: a draft-assisted tier's ``StepReport.decoded``
+counts *emitted* (accepted) tokens, never draft proposals or verify
+rounds, so the shared tracker measures its **effective** tok/s — raw
+verify-round rate × (accepted / round). A spec tier whose drafts are
+being rejected automatically earns a smaller share of the queue; one
+whose drafts land earns more. The per-tier accepted/proposed tallies are
+surfaced through :meth:`MultiEngine.stats` for acceptance-rate reporting.
 """
 from __future__ import annotations
 
@@ -76,6 +85,8 @@ class EngineTier:
     prior_tok_s: float = 1.0
     routed: int = field(default=0, init=False)      # requests sent here
     decoded: int = field(default=0, init=False)     # tokens emitted here
+    accepted: int = field(default=0, init=False)    # spec: draft tokens kept
+    proposed: int = field(default=0, init=False)    # spec: draft tokens tried
 
 
 class MultiEngine:
@@ -207,6 +218,11 @@ class MultiEngine:
         for tier, rep in zip(busy, reports):
             out[tier.name] = rep
             tier.decoded += rep.decoded
+            tier.accepted += rep.accepted
+            tier.proposed += rep.proposed
+            # decoded counts *emissions* (for spec tiers: accepted tokens,
+            # never rounds or proposals), so the tracker's tok/s is the
+            # acceptance-scaled effective speed the router needs
             if rep.decoded and rep.warm:
                 self.tracker.record(tier.name, rep.decoded, rep.dt)
             leftovers = tier.engine.take_pending()
@@ -282,6 +298,9 @@ class MultiEngine:
                 "kind": t.kind,
                 "routed": t.routed,
                 "decoded": t.decoded,
+                "accepted": t.accepted,
+                "proposed": t.proposed,
+                "acceptance": (t.accepted / t.proposed if t.proposed else 0.0),
                 "tok_s": s.ewma_thr,
                 "busy_time": s.busy_time,
                 "unit_cost": t.unit_cost,
@@ -306,6 +325,12 @@ def make_multi_engine(cfg: ModelConfig, ctx: ShardCtx,
             {"name": "dense"},
             {"name": "paged", "paged": True, "page_size": 8},
         ], max_slots=4, max_len=128)
+
+    A big/little speculative tier rides the same mechanism — pass that
+    tier ``draft_cfg``/``draft_params``/``spec_k`` in its dict; at
+    ``temperature=0`` its stream is token-identical to the plain tiers'
+    (greedy spec-decode equivalence, DESIGN.md §7), so pool outputs stay
+    tier-independent.
     """
     params = prm.materialize(model_defs(cfg), jax.random.PRNGKey(seed))
     tiers = []

@@ -18,6 +18,14 @@ Work conservation: a tier with no capacity this round (slots full, pool
 exhausted, stalled) simply takes nothing — its proportional share spills to
 the live tiers instead of queueing behind the dead one. Requests beyond the
 aggregate capacity stay queued (global admission backpressure).
+
+Speculative tiers need no special casing here: an engine decoding with a
+draft model reports *emitted* tokens per quantum (accepted draft tokens
+plus the verify correction — DESIGN.md §7), so the measured tok/s this
+module divides by unit cost is already the acceptance-scaled **effective**
+speed. Acceptance collapsing on some workload shows up as a falling
+measured speed, and the proportional law sheds load from that tier with
+no extra signal.
 """
 from __future__ import annotations
 
