@@ -48,6 +48,14 @@ greedy plus acceptance-by-temperature at k=4. The win is structural: k
 cheap draft steps plus ONE batched (k+1)-position verify replace up to
 k+1 serial target steps, so it shows even on the serializing CPU smoke
 box; greedy streams are asserted token-identical to target-only.
+
+PR 6 adds the degraded-mode comparison (BENCH_5.json): the same
+dense+paged pool twice, healthy vs. losing its paged tier to injected
+step failures mid-run (`serve/faults.py`, DESIGN.md §8). The degraded
+run must still finish every request with byte-identical greedy streams
+and zero leaked pages; the artifact records the degraded/healthy
+throughput ratio, retry/reclaim counts, and the quarantine→healthy
+recovery cycle count.
 """
 from __future__ import annotations
 
@@ -485,6 +493,123 @@ def write_bench4_json(sp: dict, path: str | Path = "BENCH_4.json") -> None:
     Path(path).write_text(json.dumps(doc, indent=2) + "\n")
 
 
+# ------------------------------------------------- degraded-mode pool (PR 6)
+def fault_rows(*, arch: str = "mistral-nemo-12b", max_new: int = 16,
+               decode_quantum: int = 4, n_requests: int = 10,
+               seed: int = 0) -> dict:
+    """Degraded-mode serving (BENCH_5): the same dense+paged pool, once
+    healthy and once losing its paged tier to injected step failures
+    mid-run (DESIGN.md §8). The degraded run must still complete every
+    request with byte-identical greedy streams and zero page leaks —
+    recovery costs wall clock, never tokens. Reported: degraded/healthy
+    throughput ratio and the cycle count from quarantine to restored
+    health."""
+    from repro.configs import get_config, smoke_config
+    from repro.serve.engine import Request
+    from repro.serve.faults import Fault, FaultyEngine
+    from repro.serve.multi_engine import HealthPolicy, make_multi_engine
+    from repro.sharding.axes import single_device_ctx
+
+    cfg = smoke_config(get_config(arch))
+    ctx = single_device_ctx()
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, int(n)).tolist()
+               for n in rng.integers(4, 31, n_requests)]
+
+    def make_reqs(rep: int) -> list:
+        return [Request(rid=1000 * rep + i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+
+    def make_pool():
+        return make_multi_engine(cfg, ctx, [
+            {"name": "dense"},
+            {"name": "paged", "paged": True, "page_size": PAGE_SIZE},
+        ], max_slots=4, max_len=MAX_LEN, decode_quantum=decode_quantum,
+            seed=0, concurrent=False,
+            policy=HealthPolicy(quarantine_after=2, quarantine_cycles=2,
+                                probation_steps=1, retry_backoff=1))
+
+    healthy = make_pool()
+    healthy.run(make_reqs(99))                     # absorb compiles
+    h_reqs = make_reqs(0)
+    t0 = time.perf_counter()
+    healthy.run(h_reqs)
+    h_dt = time.perf_counter() - t0
+
+    faulted = make_pool()
+    faulted.run(make_reqs(98))                     # same warm state
+    sick = faulted.tiers[1]
+    sick.engine = FaultyEngine(sick.engine,
+                               [Fault(kind="raise", at=(2,), n=2)])
+    f_reqs = make_reqs(0)
+    t0 = time.perf_counter()
+    faulted.run(f_reqs)
+    f_dt = time.perf_counter() - t0
+
+    raw = sick.engine.engine                       # unwrap the fault proxy
+    leaked = raw.alloc.usable_pages - len(raw.alloc.free)
+    quarantined_at = next((h["cycle"] for h in faulted.health_log
+                           if h["to"] == "quarantined"), -1)
+    recovered_at = next((h["cycle"] for h in faulted.health_log
+                         if h["to"] == "healthy"), -1)
+    h_tok = sum(len(r.out) for r in h_reqs)
+    f_tok = sum(len(r.out) for r in f_reqs)
+    return {
+        "arch": arch,
+        "healthy": {"tok": h_tok, "dt": h_dt, "tok_s": h_tok / h_dt,
+                    "all_done": all(r.done for r in h_reqs)},
+        "faulted": {"tok": f_tok, "dt": f_dt, "tok_s": f_tok / f_dt,
+                    "all_done": all(r.done for r in f_reqs),
+                    "retries": faulted.retries,
+                    "reclaims": sick.reclaims,
+                    "dead_letters": len(faulted.dead_letters),
+                    "injected": len(sick.engine.fault_log)},
+        "degraded_ratio": (f_tok / f_dt) / max(h_tok / h_dt, 1e-9),
+        "token_equiv": [r.out for r in f_reqs] == [r.out for r in h_reqs],
+        "leaked_pages": int(leaked),
+        "recovery_cycles": (recovered_at - quarantined_at
+                            if recovered_at >= 0 and quarantined_at >= 0
+                            else -1),
+        "health_log": faulted.health_log,
+    }
+
+
+def fault_csv_rows(ft: dict) -> list[str]:
+    """Harness-contract rows for degraded-mode serving (BENCH_5)."""
+    lines = []
+    for mode in ("healthy", "faulted"):
+        r = ft[mode]
+        us = r["dt"] / max(r["tok"], 1) * 1e6
+        lines.append(f"serve/{mode}_pool/tok_s,{us:.0f},{r['tok_s']:.1f}")
+    lines.append(f"serve/faulted_vs_healthy,0,{ft['degraded_ratio']:.2f}")
+    lines.append(f"serve/faulted/token_equiv,0,{int(ft['token_equiv'])}")
+    lines.append(f"serve/faulted/leaked_pages,0,{ft['leaked_pages']}")
+    lines.append(f"serve/faulted/recovery_cycles,0,{ft['recovery_cycles']}")
+    return lines
+
+
+def write_bench5_json(ft: dict, path: str | Path = "BENCH_5.json") -> None:
+    """PR 6 perf artifact: degraded-mode pool vs. its healthy twin."""
+    doc = {
+        "bench": "fault_tolerant_serving",
+        "arch": ft["arch"] + " (smoke)",
+        "fault": "paged tier step raises at engine steps 2-3 (injected)",
+        "healthy_tok_s": ft["healthy"]["tok_s"],
+        "faulted_tok_s": ft["faulted"]["tok_s"],
+        "degraded_ratio": ft["degraded_ratio"],
+        "retries": ft["faulted"]["retries"],
+        "reclaims": ft["faulted"]["reclaims"],
+        "dead_letters": ft["faulted"]["dead_letters"],
+        "token_equiv": ft["token_equiv"],
+        "leaked_pages": ft["leaked_pages"],
+        "recovery_cycles": ft["recovery_cycles"],
+        "health_transitions": ft["health_log"],
+        "all_done": bool(ft["healthy"]["all_done"]
+                         and ft["faulted"]["all_done"]),
+    }
+    Path(path).write_text(json.dumps(doc, indent=2) + "\n")
+
+
 def rows(**kw) -> list[dict]:
     fast = serve_once("fast", **kw)
     legacy = serve_once("legacy", **kw)
@@ -594,6 +719,7 @@ def main() -> None:
     long_row = long_ctx_row()
     mt = multi_tier_rows()
     sp = spec_decode_rows()
+    ft = fault_rows()
     fast, legacy = out
     dense, paged = mem
     print("name,us_per_call,derived")
@@ -605,10 +731,13 @@ def main() -> None:
         print(line)
     for line in spec_csv_rows(sp):
         print(line)
+    for line in fault_csv_rows(ft):
+        print(line)
     write_bench_json(out, mem)
     write_bench2_json(kern, long_row)
     write_bench3_json(mt)
     write_bench4_json(sp)
+    write_bench5_json(ft)
     print(f"# fast: {fast['tok']} tok in {fast['dt']:.2f}s "
           f"({fast['tok_s']:.1f} tok/s), {fast['prefill_compiles']} prefill "
           f"compiles for {fast['distinct_prompt_lens']} distinct lengths, "
@@ -663,6 +792,18 @@ def main() -> None:
         "greedy speculative streams must match target-only decode")
     assert k4["speedup"] > 1.3, (
         f"spec_k=4 must beat target-only by >1.3× (got {k4['speedup']:.2f})")
+    print(f"# degraded mode: faulted pool {ft['faulted']['tok_s']:.1f} tok/s "
+          f"vs healthy {ft['healthy']['tok_s']:.1f} "
+          f"({ft['degraded_ratio']:.2f}×), {ft['faulted']['retries']} "
+          f"retries, {ft['faulted']['reclaims']} reclaimed, recovery in "
+          f"{ft['recovery_cycles']} cycles, leaked_pages="
+          f"{ft['leaked_pages']}, token_equiv={ft['token_equiv']}")
+    assert ft["healthy"]["all_done"] and ft["faulted"]["all_done"]
+    assert ft["faulted"]["dead_letters"] == 0
+    assert ft["token_equiv"], (
+        "degraded-mode greedy streams must match the healthy pool")
+    assert ft["leaked_pages"] == 0, (
+        f"tier failure leaked {ft['leaked_pages']} pages")
 
 
 if __name__ == "__main__":

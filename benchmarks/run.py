@@ -116,6 +116,17 @@ def main() -> None:
     except Exception as e:  # spec bench must not sink the driver
         print(f"serve/spec_decode_unavailable,0,0  # {e}")
 
+    # --- Degraded-mode fault-tolerant pool (PR 6) --------------------------
+    try:
+        from benchmarks.bench_serve import (fault_csv_rows, fault_rows,
+                                            write_bench5_json)
+        ft = fault_rows()
+        for line in fault_csv_rows(ft):
+            print(line)
+        write_bench5_json(ft)
+    except Exception as e:  # fault bench must not sink the driver
+        print(f"serve/fault_tolerance_unavailable,0,0  # {e}")
+
     # --- Roofline summary (from dry-run artifacts, if present) ------------
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

@@ -1244,3 +1244,34 @@ def serve_step_fn(cfg: ModelConfig, ctx: ShardCtx):
         return fn(cfg, params, cache, tokens, pos, ctx)
 
     return step
+
+
+# --------------------------------------------------- resume-from-emitted
+def plan_resume(prompt, out, max_new: int, eos_id: int = -1):
+    """Retry law for a stream reclaimed from a failed tier (DESIGN.md §8).
+
+    Returns ``(resume_prompt, remaining_new)`` — the prompt to re-prefill
+    and the decode budget left — or ``None`` when the stream is already
+    terminal (budget spent, or the last emitted token is EOS) and needs no
+    retry.
+
+    Why the recovery is token-identical for greedy traffic: the emitted
+    prefix was produced by causal decoding, so the model's distribution
+    for token ``len(out)+1`` depends only on ``prompt + out`` — exactly
+    the context a fresh prefill of ``resume_prompt`` scores. This is the
+    same read-only-cache discipline the speculative verify path relies on
+    (§7: verify scores positions against cache + staged rows without
+    writing), applied across engines instead of within a quantum: the
+    failed tier's cache is *garbage* after a fault, so instead of trusting
+    it we rebuild the identical context from the tokens the host already
+    holds. At ``temperature=0`` the continuation therefore equals what the
+    unfailed stream would have produced byte-for-byte; sampled traffic
+    resumes the same law but not the same draws (the PRNG position is not
+    part of a request's identity).
+    """
+    emitted = len(out)
+    if emitted >= max_new:
+        return None                       # budget already spent
+    if eos_id >= 0 and emitted and out[-1] == eos_id:
+        return None                       # stream ended at EOS
+    return list(prompt) + list(out), max_new - emitted

@@ -99,7 +99,23 @@ class EngineStallError(RuntimeError):
     slack — see ``Engine._guard_limit``), so this indicates a scheduling
     bug or slot/pool starvation rather than a slow model. The message
     reports pending and unfinished request counts; ``MultiEngine`` raises
-    it with per-tier diagnostics. Subclasses :class:`RuntimeError`.
+    it with per-tier diagnostics *after* reclaiming every tier's slots and
+    pages (failure hygiene — DESIGN.md §8), so catching it leaves a clean,
+    reusable pool. Subclasses :class:`RuntimeError`.
+    """
+
+
+class RequestFailedError(RuntimeError):
+    """Terminal per-request failure: the request exhausted its retry
+    budget (or the pool stalled) and was dead-lettered instead of being
+    retried forever.
+
+    Never raised out of ``MultiEngine.run`` — a sick request must not
+    poison the pool or abort its batch-mates. Instead the pool records an
+    instance in ``MultiEngine.dead_letters[rid]`` and stops tracking the
+    request; ``Request.done`` stays False and ``Request.out`` holds
+    whatever prefix was emitted before the final failure. Subclasses
+    :class:`RuntimeError`.
     """
 
 
@@ -247,6 +263,34 @@ class PageAllocator:
         self.count[slot] = 0
         self.committed[slot] = 0
 
+    def check(self) -> None:
+        """Pool conservation invariant: every usable page is exactly once
+        either on the free list or held by exactly one slot — no leaks,
+        no double-frees, no aliased grants. Raises :class:`RuntimeError`
+        naming the offending pages. Cheap (host ints); the fault-injection
+        suite asserts it after every drain/abort, and callers recovering
+        from a tier failure may call it before reusing the engine."""
+        held = [int(self.table[s, t])
+                for s in range(self.table.shape[0])
+                for t in range(int(self.count[s]))]
+        seen = sorted(self.free + held)
+        want = list(range(1, self.num_pages))
+        if seen != want:
+            from collections import Counter
+            c = Counter(seen)
+            dup = sorted(p for p, k in c.items() if k > 1)
+            lost = sorted(set(want) - set(c))
+            bad = sorted(set(seen) - set(want))
+            raise RuntimeError(
+                f"page pool invariant violated: leaked={lost} "
+                f"double-held={dup} out-of-range={bad}")
+        if any(self.count[s] > self.committed[s]
+               for s in range(len(self.count))):
+            raise RuntimeError(
+                f"page pool invariant violated: a slot holds more pages "
+                f"than its commit (count={self.count.tolist()}, "
+                f"committed={self.committed.tolist()})")
+
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ctx: ShardCtx, *,
@@ -258,7 +302,7 @@ class Engine:
                  temperature: float = 0.0, top_k: int = 0,
                  top_p: float = 0.0, sample_seed: int = 0,
                  draft_cfg: ModelConfig | None = None, draft_params=None,
-                 spec_k: int = 0):
+                 spec_k: int = 0, step_deadline_s: float | None = None):
         """Build a serving engine over an existing parameter tree.
 
         Args:
@@ -319,11 +363,21 @@ class Engine:
           spec_k: draft proposals per verify round (≥ 1 with a draft).
             Each decode-scan round emits between 1 and spec_k+1 tokens;
             greedy output is token-identical to ``spec_k=0`` serving.
+          step_deadline_s: advisory wall-clock budget for one ``step()``
+            (None: unbounded). The engine itself never preempts a quantum
+            — XLA dispatches are not interruptible — but a supervisor
+            (``MultiEngine``'s per-tier watchdog, DESIGN.md §8) reads this
+            to decide when a step has hung and the tier should be
+            quarantined.
         """
         assert not cfg.enc_dec, "enc-dec serving uses whisper_decode_step"
         self.cfg, self.params, self.ctx = cfg, params, ctx
         self.max_slots, self.max_len, self.eos_id = max_slots, max_len, eos_id
         self.fast = fast
+        if step_deadline_s is not None and step_deadline_s <= 0:
+            raise ValueError(f"step_deadline_s must be positive or None, "
+                             f"got {step_deadline_s}")
+        self.step_deadline_s = step_deadline_s
         self.decode_quantum = max(1, decode_quantum)
         if temperature < 0:
             raise ValueError(f"temperature must be >= 0, got {temperature}")
@@ -673,6 +727,44 @@ class Engine:
                     f"(limit {limit}): {len(self.pending)} pending")
             self.step()
             guard += 1
+
+    def abort(self) -> list:
+        """Failure-safe reclaim of every *admitted* request (DESIGN.md §8).
+
+        Empties the decode slots without stepping the model: each in-flight
+        request is handed back with whatever tokens it already emitted
+        (``Request.out`` is preserved — the resume-from-emitted retry law
+        re-prefills from prompt+out), its pages are released, and the
+        device-side active/remaining vectors are zeroed so a later admit
+        meets the same inactive slots a fresh engine has. The KV cache
+        contents are left as-is — inactive slots never read them, dense
+        rows are fully overwritten at the next admit, and released pages
+        re-enter the free list (table rows point back at trash page 0).
+
+        Host-side bookkeeping only — safe to call even when the engine's
+        last ``step()`` raised mid-quantum. Pending (never-admitted)
+        requests are NOT included; callers wanting those too should call
+        ``take_pending()`` first. Returns the reclaimed requests in slot
+        order."""
+        out = []
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            out.append(req)
+            self.slot_req[i] = None
+            if self.paged:
+                self._release_slot_pages(i)
+                self.pos_host[i] = 0
+            self.pos[i] = 0                        # legacy-path mirror
+        if self.paged:
+            self._push_page_table()
+        if self.fast:
+            repl = NamedSharding(self.ctx.mesh, PartitionSpec())
+            self.active_dev = jax.device_put(
+                jnp.zeros(self.max_slots, bool), repl)
+            self.remaining_dev = jax.device_put(
+                jnp.zeros(self.max_slots, jnp.int32), repl)
+        return out
 
     # ---- paged-pool bookkeeping ------------------------------------------
     @property

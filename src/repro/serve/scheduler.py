@@ -12,7 +12,10 @@ consumed by :class:`repro.serve.multi_engine.MultiEngine`:
 * :func:`route_requests` — one routing round: split the queued units over
   the tiers with :func:`repro.core.chunking.proportional_split` (per-tier
   measured tok/s over token-unit cost), respecting per-tier admission
-  capacity and per-request tier eligibility.
+  capacity and per-request tier eligibility;
+* :func:`apply_health` — the quarantine/probation capacity mask of the
+  tier health supervisor (DESIGN.md §8): a quarantined tier takes
+  nothing, a probation tier takes at most one canary request.
 
 Work conservation: a tier with no capacity this round (slots full, pool
 exhausted, stalled) simply takes nothing — its proportional share spills to
@@ -32,6 +35,54 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 from repro.core.chunking import proportional_split
+
+
+# Tier health states (DESIGN.md §8). Pure strings so the routing law stays
+# jax-free and the state machine is trivially serializable/loggable.
+HEALTHY = "healthy"          # full proportional share
+DEGRADED = "degraded"        # recent failure(s), still below the
+#                              quarantine threshold — routes normally
+QUARANTINED = "quarantined"  # masked out entirely; in-flight reclaimed
+PROBATION = "probation"      # re-admitted with a single canary request
+HEALTH_STATES = (HEALTHY, DEGRADED, QUARANTINED, PROBATION)
+
+
+def apply_health(capacities: Sequence[int], states: Sequence[str],
+                 busy: Sequence[int], *, canary: int = 1) -> list[int]:
+    """Mask per-tier routing capacity by tier health.
+
+    The quarantine/probation law expressed on capacities, which is how
+    :func:`route_requests` already encodes dead tiers (capacity 0 takes
+    nothing and its proportional share spills to the live tiers — same
+    work-conservation path as a stalled or pool-exhausted tier):
+
+    * ``quarantined`` — capacity 0: the tier is ineligible for every
+      request this cycle, full stop.
+    * ``probation`` — at most ``canary`` requests in flight across slots
+      and pending (``busy[i]``): the tier must prove itself on a single
+      canary before its full share is restored; a second request is not
+      risked on a tier that just came out of quarantine.
+    * ``healthy`` / ``degraded`` — untouched. Degraded is a bookkeeping
+      state (failures seen, threshold not reached); starving it would turn
+      one transient fault into a self-fulfilling outage.
+
+    Pure host code, unit-testable without engines.
+    """
+    if not len(capacities) == len(states) == len(busy):
+        raise ValueError(f"{len(capacities)} capacities, {len(states)} "
+                         f"states, {len(busy)} busy counts")
+    out = []
+    for c, s, b in zip(capacities, states, busy):
+        if s not in HEALTH_STATES:
+            raise ValueError(f"unknown health state {s!r} "
+                             f"(expected one of {HEALTH_STATES})")
+        if s == QUARANTINED:
+            out.append(0)
+        elif s == PROBATION:
+            out.append(min(int(c), max(0, canary - int(b))))
+        else:
+            out.append(int(c))
+    return out
 
 
 def request_units(prompt_len: int, max_new: int) -> int:

@@ -1,0 +1,468 @@
+"""Fault-tolerant serving pool (DESIGN.md §8): deterministic fault
+injection, tier health supervision, failure hygiene, and request-level
+retry with token-identical greedy recovery.
+
+The fault matrix exercised here: {raise, hang, exhaust, nan} ×
+{serial, concurrent} × {dense, paged} × {single-tier, multi-tier}.
+Every recovery assertion compares against an unfailed reference run —
+the §8 contract is that at temperature=0 a fault changes *when* tokens
+arrive, never *which* tokens — and every paged scenario asserts the page
+pool conservation invariant (zero leaks) after recovery.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import all_configs, smoke_config
+from repro.serve.engine import (EngineStallError, PageAllocator, Request,
+                                RequestFailedError, StepReport, make_engine)
+from repro.serve.faults import FAULT_KINDS, Fault, FaultyEngine, InjectedFault
+from repro.serve.multi_engine import HealthPolicy, make_multi_engine
+from repro.serve.scheduler import (DEGRADED, HEALTHY, PROBATION, QUARANTINED,
+                                   apply_health)
+
+ARCH = "mistral-nemo-12b"
+
+
+def _cfg():
+    return smoke_config(all_configs()[ARCH])
+
+
+def _prompts(n, lo=4, hi=31, seed=3, vocab=512):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, int(x)).tolist()
+            for x in rng.integers(lo, hi, n)]
+
+
+def _reqs(prompts, max_new=6):
+    return [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def _reference_streams(cfg, ctx, prompts, max_new=6, **kw):
+    """Greedy streams of an unfailed single-engine run — the §8 oracle."""
+    eng = make_engine(cfg, ctx, max_slots=2, max_len=64, decode_quantum=4,
+                      **kw)
+    reqs = _reqs(prompts, max_new)
+    eng.run(reqs)
+    return [r.out for r in reqs]
+
+
+def _assert_pool_clean(meng):
+    """Zero page leaks and empty slots on every tier after recovery."""
+    for t in meng.tiers:
+        eng = getattr(t.engine, "engine", t.engine)   # unwrap FaultyEngine
+        assert all(r is None for r in eng.slot_req), t.name
+        if eng.paged:
+            eng.alloc.check()
+            assert len(eng.alloc.free) == eng.alloc.usable_pages, t.name
+
+
+# ------------------------------------------------------ deterministic faults
+def test_fault_schedule_deterministic():
+    """Same Fault fields → bit-identical schedule; the reproducibility
+    contract that lets a failing scenario replay from its parameters."""
+    f = Fault(kind="raise", p=0.3, seed=7)
+    assert f.schedule(256) == Fault(kind="raise", p=0.3, seed=7).schedule(256)
+    assert f.schedule(256) != Fault(kind="raise", p=0.3, seed=8).schedule(256)
+    # explicit indices, periodic window, and n-step persistence
+    assert Fault(kind="hang", at=(3,)).schedule(6) == \
+        [False, False, False, True, False, False]
+    assert Fault(kind="nan", every=3, phase=1).schedule(7) == \
+        [False, True, False, False, True, False, False]
+    assert Fault(kind="raise", at=(1,), n=3).schedule(5) == \
+        [False, True, True, True, False]
+    # prefix stability: a longer horizon never rewrites earlier draws
+    assert Fault(kind="raise", p=0.5, seed=1).schedule(300)[:64] == \
+        Fault(kind="raise", p=0.5, seed=1).schedule(64)
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        Fault(kind="explode")
+    with pytest.raises(ValueError):
+        Fault(kind="raise", n=0)
+    with pytest.raises(ValueError):
+        Fault(kind="raise", p=1.5)
+    with pytest.raises(ValueError):
+        FaultyEngine(object(), ["raise"])          # not Fault instances
+    assert set(FAULT_KINDS) == {"raise", "hang", "exhaust", "nan"}
+
+
+def test_apply_health_capacity_mask():
+    """Pure quarantine/probation law: quarantined takes nothing, probation
+    at most one canary across slots+pending, healthy/degraded untouched."""
+    caps = [4, 4, 4, 4]
+    states = [HEALTHY, DEGRADED, QUARANTINED, PROBATION]
+    assert apply_health(caps, states, [0, 0, 0, 0]) == [4, 4, 0, 1]
+    assert apply_health(caps, states, [2, 2, 2, 1]) == [4, 4, 0, 0]
+    assert apply_health([0], [PROBATION], [0]) == [0]   # canary ≤ capacity
+    with pytest.raises(ValueError):
+        apply_health([1], ["sick"], [0])
+    with pytest.raises(ValueError):
+        apply_health([1, 1], [HEALTHY], [0])
+
+
+def test_plan_resume_law():
+    """Pure resume law: re-prefill prompt+out with the leftover budget;
+    None when the stream is already terminal (budget spent or EOS)."""
+    from repro.serve.decode import plan_resume
+    assert plan_resume([1, 2], [7, 8], 6) == ([1, 2, 7, 8], 4)
+    assert plan_resume([1, 2], [], 6) == ([1, 2], 6)   # failed pre-decode
+    assert plan_resume([1, 2], [7, 8], 2) is None      # budget spent
+    assert plan_resume([1, 2], [7, 9], 6, eos_id=9) is None
+    assert plan_resume([1, 2], [9, 7], 6, eos_id=9) == ([1, 2, 9, 7], 4)
+
+
+def test_page_allocator_check_catches_corruption():
+    """The conservation invariant names leaked and double-held pages."""
+    alloc = PageAllocator(num_pages=9, max_slots=2, pages_per_slot=4)
+    alloc.check()                                  # fresh pool is clean
+    alloc.commit(0, 2)
+    alloc.grow_to(0, 2)
+    alloc.check()                                  # held pages are fine
+    leaked = alloc.free.pop()                      # page falls off the books
+    with pytest.raises(RuntimeError, match="leaked"):
+        alloc.check()
+    alloc.free.append(leaked)
+    alloc.free.append(int(alloc.table[0, 0]))      # double-free: aliased page
+    with pytest.raises(RuntimeError, match="double-held"):
+        alloc.check()
+
+
+def test_engine_abort_releases_everything(ctx):
+    """Engine.abort empties the slots, returns the in-flight requests with
+    their partial streams, releases every page, and leaves the engine
+    reusable — the failure-hygiene primitive under `_reclaim_tier`."""
+    cfg = _cfg()
+    for paged in (False, True):
+        kw = {"paged": True, "page_size": 8} if paged else {}
+        eng = make_engine(cfg, ctx, max_slots=2, max_len=64,
+                          decode_quantum=4, **kw)
+        reqs = _reqs(_prompts(3, vocab=cfg.vocab), max_new=20)
+        for r in reqs:
+            eng.submit(r)
+        eng.step()
+        eng.step()                                     # both slots mid-flight
+        aborted = eng.abort()
+        assert len(aborted) == 2 and all(not r.done for r in aborted)
+        assert all(len(r.out) > 0 for r in aborted)    # partial streams kept
+        assert all(r is None for r in eng.slot_req)
+        if paged:
+            eng.alloc.check()
+            assert len(eng.alloc.free) == eng.alloc.usable_pages
+        # pending was NOT aborted — callers take_pending() first
+        assert len(eng.take_pending()) == 1
+        fresh = Request(rid=9, prompt=[1, 2, 3], max_new=4)
+        eng.run([fresh])                               # engine still serves
+        assert fresh.done and len(fresh.out) == 4
+
+
+def test_faulty_engine_transparent_without_faults(ctx):
+    """An empty fault schedule is a perfect proxy: same streams, same
+    tier-facing surface as the wrapped engine."""
+    cfg = _cfg()
+    prompts = _prompts(3, vocab=cfg.vocab)
+    eng = FaultyEngine(make_engine(cfg, ctx, max_slots=2, max_len=64,
+                                   decode_quantum=4), [])
+    reqs = _reqs(prompts)
+    for r in reqs:
+        eng.submit(r)
+    eng.drain()
+    assert [r.out for r in reqs] == _reference_streams(cfg, ctx, prompts)
+    assert eng.fault_log == [] and eng.steps_seen > 0
+    assert eng.max_len == 64                           # passthrough attrs
+
+
+def test_faulty_engine_injects_on_schedule(ctx):
+    """Each fault kind fires exactly where its schedule says."""
+    cfg = _cfg()
+    eng = FaultyEngine(
+        make_engine(cfg, ctx, max_slots=2, max_len=64, decode_quantum=4),
+        [Fault(kind="raise", at=(0,)), Fault(kind="nan", at=(1,)),
+         Fault(kind="exhaust", at=(0,))])
+    assert eng.plan_admission([Request(rid=0, prompt=[1], max_new=2)]) == 0
+    assert eng.plan_admission([Request(rid=0, prompt=[1], max_new=2)]) == 1
+    with pytest.raises(InjectedFault):
+        eng.step()
+    rep = eng.step()                                   # nan step: corrupt
+    assert np.isnan(rep.dt) and rep.decoded > 10**6
+    assert not eng.engine.has_work()                   # quantum was skipped
+    assert eng.fault_log == [(0, "exhaust"), (0, "raise"), (1, "nan")]
+
+
+# --------------------------------------------------- multi-tier fault matrix
+@pytest.mark.parametrize("concurrent", [False, True],
+                         ids=["serial", "concurrent"])
+def test_raise_fault_recovery_token_identical(ctx, concurrent):
+    """The flagship §8 scenario: a dense+paged pool loses its paged tier to
+    consecutive step exceptions mid-run. The supervisor quarantines it,
+    reclaims and re-routes its in-flight requests, and every greedy stream
+    comes out byte-identical to the unfailed reference — with zero page
+    leaks and the sick tier back to healthy through probation."""
+    cfg = _cfg()
+    prompts = _prompts(6, vocab=cfg.vocab)
+    meng = make_multi_engine(cfg, ctx, [
+        {"name": "dense"},
+        {"name": "paged", "paged": True, "page_size": 8},
+    ], max_slots=2, max_len=64, decode_quantum=4, concurrent=concurrent,
+        policy=HealthPolicy(quarantine_after=2, quarantine_cycles=1,
+                            probation_steps=1, retry_backoff=0))
+    sick = meng.tiers[1]
+    sick.engine = FaultyEngine(sick.engine, [Fault(kind="raise", at=(2,),
+                                                   n=2)])
+    reqs = _reqs(prompts)
+    meng.run(reqs)
+    assert all(r.done for r in reqs) and not meng.dead_letters
+    assert [r.out for r in reqs] == _reference_streams(cfg, ctx, prompts)
+    assert any(k == "raise" for _, k in sick.engine.fault_log)
+    assert sick.reclaims > 0, meng.stats()             # reclaim path taken
+    states = [h["to"] for h in meng.health_log if h["tier"] == "paged"]
+    assert QUARANTINED in states and PROBATION in states
+    assert sick.health in (HEALTHY, PROBATION, DEGRADED)
+    _assert_pool_clean(meng)
+    # prompts/budgets restored to caller-visible originals after retries
+    for r, p in zip(reqs, prompts):
+        assert r.prompt == p and r.max_new == 6
+
+
+def test_nan_report_quarantines_without_poisoning_tracker(ctx):
+    """Corrupt StepReports (NaN dt, absurd token counts) are rejected
+    before the shared tracker: the tier is quarantined, routing speeds
+    stay finite, and the streams still match the unfailed reference."""
+    cfg = _cfg()
+    prompts = _prompts(5, vocab=cfg.vocab)
+    meng = make_multi_engine(cfg, ctx, [{"name": "good"}, {"name": "bad"}],
+                             max_slots=2, max_len=64, decode_quantum=4,
+                             concurrent=False,
+                             policy=HealthPolicy(quarantine_after=2,
+                                                 quarantine_cycles=1,
+                                                 probation_steps=1,
+                                                 retry_backoff=0))
+    bad = meng.tiers[1]
+    bad.engine = FaultyEngine(bad.engine, [Fault(kind="nan", at=(1,), n=2)])
+    reqs = _reqs(prompts)
+    meng.run(reqs)
+    assert all(r.done for r in reqs) and not meng.dead_letters
+    assert [r.out for r in reqs] == _reference_streams(cfg, ctx, prompts)
+    reasons = [h["reason"] for h in meng.health_log if h["tier"] == "bad"]
+    assert any("corrupt StepReport" in r for r in reasons), meng.health_log
+    for name in ("good", "bad"):
+        assert np.isfinite(meng.tracker.throughput(name))
+    assert meng.tracker.snapshot()["bad"].iters_done < 10**6
+
+
+def test_exhaust_fault_reroutes_without_health_penalty(ctx):
+    """Transient pool exhaustion is backpressure, not sickness: every
+    admission probe on the starved tier reports zero capacity, the
+    router's work conservation sends everything to the live tier, and the
+    starved tier's health never leaves healthy."""
+    cfg = _cfg()
+    prompts = _prompts(4, vocab=cfg.vocab)
+    meng = make_multi_engine(cfg, ctx, [{"name": "live"}, {"name": "dry"}],
+                             max_slots=2, max_len=64, decode_quantum=4,
+                             concurrent=False)
+    dry = meng.tiers[1]
+    dry.engine = FaultyEngine(dry.engine, [Fault(kind="exhaust", every=1)])
+    reqs = _reqs(prompts, max_new=3)
+    meng.run(reqs)
+    assert all(r.done for r in reqs)
+    assert all(meng.assigned[r.rid] == "live" for r in reqs), meng.assigned
+    assert dry.health == HEALTHY and dry.failures == 0
+    assert not [h for h in meng.health_log if h["tier"] == "dry"]
+
+
+def test_hang_deadline_watchdog_serial(ctx):
+    """Serial mode: a hung quantum cannot be preempted, but the post-hoc
+    watchdog still counts it as a failure — the tier is quarantined and
+    its tokens (the work landed, late) are kept by the resume law, so
+    recovery stays token-identical."""
+    cfg = _cfg()
+    prompts = _prompts(5, vocab=cfg.vocab)
+    meng = make_multi_engine(cfg, ctx, [
+        {"name": "fast"},
+        {"name": "wedged", "step_deadline_s": 0.02},
+    ], max_slots=2, max_len=64, decode_quantum=4, concurrent=False,
+        policy=HealthPolicy(quarantine_after=2, quarantine_cycles=1,
+                            probation_steps=1, retry_backoff=0))
+    wedged = meng.tiers[1]
+    wedged.engine = FaultyEngine(
+        wedged.engine, [Fault(kind="hang", at=(1,), n=2, hang_s=0.1)])
+    reqs = _reqs(prompts)
+    meng.run(reqs)
+    assert all(r.done for r in reqs) and not meng.dead_letters
+    assert [r.out for r in reqs] == _reference_streams(cfg, ctx, prompts)
+    states = [h["to"] for h in meng.health_log if h["tier"] == "wedged"]
+    assert QUARANTINED in states, meng.health_log
+
+
+def test_hang_timeout_watchdog_concurrent(ctx):
+    """Concurrent mode: the watchdog times out the hung step's future; the
+    tier's engine stays owned by its thread (`inflight`) until the sleep
+    ends, reclaim is deferred to `_poll_inflight`, and the pool finishes
+    the whole workload token-identically meanwhile."""
+    cfg = _cfg()
+    prompts = _prompts(5, vocab=cfg.vocab)
+    meng = make_multi_engine(cfg, ctx, [
+        {"name": "fast"},
+        {"name": "wedged", "step_deadline_s": 0.3},
+    ], max_slots=2, max_len=64, decode_quantum=4, concurrent=True,
+        policy=HealthPolicy(quarantine_after=1, quarantine_cycles=1,
+                            probation_steps=1, retry_backoff=0))
+    wedged = meng.tiers[1]
+    # prewarm both tiers so compile time cannot masquerade as a hang
+    warm = _reqs(_prompts(2, seed=11, vocab=cfg.vocab), max_new=2)
+    meng.run(warm)
+    wedged.engine = FaultyEngine(
+        wedged.engine, [Fault(kind="hang", at=(0,), hang_s=1.5)],
+    )
+    reqs = [Request(rid=10 + i, prompt=p, max_new=6)
+            for i, p in enumerate(prompts)]
+    meng.run(reqs)
+    assert all(r.done for r in reqs) and not meng.dead_letters
+    ref = _reference_streams(cfg, ctx, prompts)
+    # warmup shifted nothing: greedy streams are position-independent
+    assert [r.out for r in reqs] == ref
+    reasons = [h["reason"] for h in meng.health_log if h["tier"] == "wedged"]
+    assert any("still running" in r for r in reasons), meng.health_log
+    assert wedged.inflight is None                     # thread collected
+    _assert_pool_clean(meng)
+
+
+# ----------------------------------------------- single tier, retry, budget
+def test_single_tier_pool_survives_transient_fault(ctx):
+    """A one-tier pool has nowhere to re-route — recovery is quarantine,
+    backoff, probation, and the SAME tier finishing the work. Streams
+    still match the unfailed reference."""
+    cfg = _cfg()
+    prompts = _prompts(3, vocab=cfg.vocab)
+    meng = make_multi_engine(cfg, ctx, [{"name": "only", "paged": True,
+                                         "page_size": 8}],
+                             max_slots=2, max_len=64, decode_quantum=4,
+                             concurrent=False,
+                             policy=HealthPolicy(quarantine_after=1,
+                                                 quarantine_cycles=1,
+                                                 probation_steps=1,
+                                                 retry_backoff=0))
+    only = meng.tiers[0]
+    only.engine = FaultyEngine(only.engine, [Fault(kind="raise", at=(1,))])
+    reqs = _reqs(prompts)
+    meng.run(reqs)
+    assert all(r.done for r in reqs) and not meng.dead_letters
+    assert [r.out for r in reqs] == _reference_streams(cfg, ctx, prompts)
+    assert meng.retries > 0                            # resume law exercised
+    _assert_pool_clean(meng)
+
+
+def test_retry_budget_exhausted_dead_letters(ctx):
+    """A tier that fails every step after its first drives each admitted
+    request through the retry budget and into `dead_letters` as a typed
+    `RequestFailedError` — original prompt/budget restored, partial stream
+    kept, `done` False, pages released."""
+    cfg = _cfg()
+    meng = make_multi_engine(cfg, ctx, [{"name": "only", "paged": True,
+                                         "page_size": 8}],
+                             max_slots=2, max_len=64, decode_quantum=4,
+                             concurrent=False,
+                             policy=HealthPolicy(quarantine_after=1,
+                                                 quarantine_cycles=1,
+                                                 probation_steps=1,
+                                                 retry_budget=1,
+                                                 retry_backoff=0))
+    only = meng.tiers[0]
+    only.engine = FaultyEngine(only.engine,
+                               [Fault(kind="raise", at=(1,), n=10**6)])
+    prompt = _prompts(1, vocab=cfg.vocab)[0]
+    req = Request(rid=0, prompt=list(prompt), max_new=12)
+    meng.run([req])                                    # returns, no raise
+    assert not req.done
+    assert 0 in meng.dead_letters
+    assert isinstance(meng.dead_letters[0], RequestFailedError)
+    assert "retry budget" in str(meng.dead_letters[0])
+    assert req.prompt == prompt and req.max_new == 12  # identity restored
+    assert len(req.out) > 0                            # partial stream kept
+    assert meng.stats()["dead_letters"], meng.stats()
+    _assert_pool_clean(meng)
+    # a dead-lettered rid resubmits cleanly once the tier heals
+    only.engine = only.engine.engine                   # unwrap the fault
+    only.health, only.fail_streak = HEALTHY, 0
+    req.out, req.done = [], False
+    meng.run([req])
+    assert req.done and len(req.out) == 12
+    assert 0 not in meng.dead_letters                  # cleared on resubmit
+
+
+def test_probation_routes_single_canary(ctx):
+    """While a tier is on probation it is routed at most one request per
+    cycle — the canary — until its clean steps restore the full share."""
+    cfg = _cfg()
+    meng = make_multi_engine(cfg, ctx, [{"name": "a"}, {"name": "b"}],
+                             max_slots=4, max_len=64, decode_quantum=4,
+                             concurrent=False,
+                             policy=HealthPolicy(quarantine_after=1,
+                                                 quarantine_cycles=1,
+                                                 probation_steps=3,
+                                                 retry_backoff=0))
+    b = meng.tiers[1]
+    b.engine = FaultyEngine(b.engine, [Fault(kind="raise", at=(1,))])
+    reqs = _reqs(_prompts(8, vocab=cfg.vocab), max_new=8)
+    meng.run(reqs)
+    assert all(r.done for r in reqs)
+    probation_cycles = [c for c in meng.cycle_log
+                        if c["health"]["b"] == PROBATION]
+    assert probation_cycles, meng.health_log
+    for c in probation_cycles:
+        assert c["routed"]["b"] <= 1, c
+
+
+# ----------------------------------------------------- stall-path hygiene
+def test_stall_hygiene_dead_letters_and_clean_resubmit(ctx):
+    """Satellite 2: when the stall guard trips, every unfinished request
+    gets a terminal state (dead-lettered with the stall diagnostics), all
+    pages are back in the pool, and a fresh submit on the SAME pool runs
+    cleanly — no half-drained slots, no stale retry state."""
+    cfg = _cfg()
+    meng = make_multi_engine(cfg, ctx, [{"name": "only", "paged": True,
+                                         "page_size": 8}],
+                             max_slots=1, max_len=64, decode_quantum=2,
+                             concurrent=False)
+    eng = meng.tiers[0].engine
+    real_step = eng.step
+    eng.step = lambda: StepReport()                    # wedged device
+    reqs = [Request(rid=i, prompt=[3 + i, 4], max_new=2) for i in range(2)]
+    with pytest.raises(EngineStallError, match="only:"):
+        meng.run(reqs)
+    assert all(not r.done for r in reqs)
+    assert set(meng.dead_letters) == {0, 1}
+    assert all(isinstance(e, RequestFailedError)
+               for e in meng.dead_letters.values())
+    assert all("stalled" in str(e) for e in meng.dead_letters.values())
+    assert not meng.queue and not meng._delayed and not meng._resume
+    _assert_pool_clean(meng)
+    eng.step = real_step                               # device comes back
+    fresh = Request(rid=0, prompt=[5, 6, 7], max_new=3)
+    meng.run([fresh])                                  # same rid, clean pool
+    assert fresh.done and len(fresh.out) == 3
+    assert 0 not in meng.dead_letters
+
+
+def test_submit_rejects_live_request_object(ctx):
+    """A Request object is single-use until it terminates: double-submit
+    while queued or in flight is a typed error, not silent aliasing."""
+    cfg = _cfg()
+    meng = make_multi_engine(cfg, ctx, [{"name": "a"}],
+                             max_slots=2, max_len=64, decode_quantum=4,
+                             concurrent=False)
+    req = Request(rid=0, prompt=[1, 2, 3], max_new=20)
+    meng.submit(req)
+    with pytest.raises(ValueError, match="single-use"):
+        meng.submit(req)
+    meng.step()                                        # admitted into a slot
+    assert not req.done
+    with pytest.raises(ValueError, match="single-use"):
+        meng.submit(req)
+    meng.drain()
+    assert req.done
+    req.out, req.done = [], False                      # terminal → reusable
+    meng.submit(req)
+    meng.drain()
+    assert req.done
